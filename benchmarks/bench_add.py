@@ -1,0 +1,68 @@
+"""Paper Fig. 3(a)/(b) + Table 1: add/sub strategies across operand sizes.
+
+Compares DoT against the prior-work dependency structures (sequential ADC
+chain, naive SIMD ripple, full KSA, two-level KSA [y-cruncher], carry-
+select [Ren et al.]) on random and pathological operands, reporting wall
+time and HLO instruction counts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.add as A
+from repro.core import limbs as L
+from benchmarks.util import hlo_ops, row, time_fn
+
+SIZES = (512, 1024, 2048, 4096, 8192, 16384, 32768)
+BATCH = 512
+STRATEGIES = ("seq", "naive_simd", "ksa", "two_level_ksa", "carry_select", "dot")
+
+
+def _operands(rng, nbits, batch, pathological=False):
+    m = nbits // 32
+    if pathological:
+        pairs = L.pathological_pairs(nbits)
+        reps = -(-batch // len(pairs))
+        xs = [p[0] for p in pairs] * reps
+        ys = [p[1] for p in pairs] * reps
+        xs, ys = xs[:batch], ys[:batch]
+    else:
+        xs = L.random_bigints(rng, batch, nbits)
+        ys = L.random_bigints(rng, batch, nbits)
+    return (jnp.asarray(L.ints_to_batch(xs, m)),
+            jnp.asarray(L.ints_to_batch(ys, m)))
+
+
+def run(full: bool = False):
+    rng = np.random.default_rng(0)
+    out = []
+    sizes = SIZES if full else SIZES[::2]
+    for nbits in sizes:
+        a, b = _operands(rng, nbits, BATCH)
+        ap, bp = _operands(rng, nbits, BATCH, pathological=True)
+        base_t = None
+        for strat in STRATEGIES:
+            fn = jax.jit(lambda x, y, s=strat: A.ADD_STRATEGIES[s](x, y))
+            t = time_fn(fn, a, b, iters=10)
+            tp = time_fn(fn, ap, bp, iters=5)
+            ops = hlo_ops(lambda x, y, s=strat: A.ADD_STRATEGIES[s](x, y), a, b)
+            if strat == "seq":
+                base_t = t
+            out.append(row(f"add/{nbits}b/{strat}", t / BATCH,
+                           f"speedup_vs_seq={base_t / t:.2f}x ops={ops} "
+                           f"patho_us={tp / BATCH * 1e6:.2f}"))
+    # subtraction spot check (paper reports symmetric results)
+    for nbits in (2048,):
+        a, b = _operands(rng, nbits, BATCH)
+        for strat in ("seq", "dot"):
+            fn = jax.jit(lambda x, y, s=strat: A.SUB_STRATEGIES[s](x, y))
+            t = time_fn(fn, a, b, iters=10)
+            out.append(row(f"sub/{nbits}b/{strat}", t / BATCH, ""))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

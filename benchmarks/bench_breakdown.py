@@ -1,0 +1,99 @@
+"""Paper Tables 1 & 3: phase-wise cost breakdown of DoT addition and
+multiplication, plus the carry-to-add overhead ratio on random vs
+pathological inputs.
+
+Phase costs are measured by timing jitted PREFIXES of the algorithm
+(P1; P1-2; P1-3; P1-4) and differencing -- the same attribution the
+paper does with cycle counters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import limbs as L
+from repro.core.add import _carries_ksa, _shift_up
+from benchmarks.util import row, time_fn
+
+U32 = jnp.uint32
+MAX = jnp.uint32(0xFFFFFFFF)
+BATCH = 1024
+NBITS = 512   # paper Table 3: 512-bit addition, m=16 32-bit limbs
+
+
+def _phase_fns():
+    def p1(a, b):                       # load + add
+        return a + b
+
+    def p12(a, b):                      # + carry generation / alignment
+        r = a + b
+        c = (r < a).astype(U32)
+        return r, _shift_up(c, jnp.zeros(a.shape[:-1], U32)), c[..., -1]
+
+    def p123(a, b):                     # + carry add (fast path complete)
+        r, ca, cout = p12(a, b)
+        r2 = r + ca
+        return r2, cout | (r2 < r)[..., -1].astype(U32)
+
+    def p1234(a, b):                    # + unconditional Phase 4 (KSA)
+        r = a + b
+        g = (r < a).astype(U32)
+        p = (r == MAX).astype(U32)
+        c, cout = _carries_ksa(g, p, jnp.zeros(a.shape[:-1], U32))
+        return r + c, cout
+
+    return p1, p12, p123, p1234
+
+
+def run(full: bool = False):
+    rng = np.random.default_rng(2)
+    m = NBITS // 32
+    xs = L.random_bigints(rng, BATCH, NBITS)
+    ys = L.random_bigints(rng, BATCH, NBITS)
+    a = jnp.asarray(L.ints_to_batch(xs, m))
+    b = jnp.asarray(L.ints_to_batch(ys, m))
+
+    p1, p12, p123, p1234 = _phase_fns()
+    t1 = time_fn(jax.jit(p1), a, b)
+    t12 = time_fn(jax.jit(p12), a, b)
+    t123 = time_fn(jax.jit(p123), a, b)
+    t1234 = time_fn(jax.jit(p1234), a, b)
+
+    total = t1234
+    ph = {
+        "p1_add": t1,
+        "p2_carry_gen": max(t12 - t1, 0),
+        "p3_carry_add": max(t123 - t12, 0),
+        "p4_resolve": max(t1234 - t123, 0),
+    }
+    out = []
+    for name, t in ph.items():
+        out.append(row(f"breakdown/add512/{name}", t / BATCH,
+                       f"pct={100 * t / total:.1f}"))
+    carry = ph["p2_carry_gen"] + ph["p3_carry_add"] + ph["p4_resolve"]
+    out.append(row("breakdown/add512/carry_to_add_ratio", 0.0,
+                   f"{carry / max(ph['p1_add'], 1e-12):.2f} (paper DoT: 4.9)"))
+
+    # Phase-4 trigger rate: random vs pathological (paper: never vs always)
+    def trigger_rate(pairs):
+        aa = jnp.asarray(L.ints_to_batch([p[0] for p in pairs], m))
+        bb = jnp.asarray(L.ints_to_batch([p[1] for p in pairs], m))
+        r = aa + bb
+        c = (r < aa).astype(U32)
+        ca = _shift_up(c, jnp.zeros(aa.shape[:-1], U32))
+        r2 = r + ca
+        casc = (r2 < r)[..., :-1].any(-1)
+        return float(casc.mean())
+
+    rnd_rate = trigger_rate(list(zip(xs, ys)))
+    patho_rate = trigger_rate(L.pathological_pairs(NBITS))
+    out.append(row("breakdown/add512/phase4_rate_random", 0.0, f"{rnd_rate:.2e}"))
+    out.append(row("breakdown/add512/phase4_rate_pathological", 0.0,
+                   f"{patho_rate:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

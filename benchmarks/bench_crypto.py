@@ -1,0 +1,67 @@
+"""Paper Fig. 5 + appendix latency CDFs (OpenSSL speed): batched RSA
+sign/verify and DH-style fixed-base modexp throughput + latency
+percentiles across key sizes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import limbs as L
+from repro.core import modular as MOD
+from repro.core import rsa as RSA
+from benchmarks.util import row
+
+
+def _latency_percentiles(fn, arg, iters=12):
+    fn(arg).block_until_ready()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(arg).block_until_ready()
+        ts.append(time.perf_counter() - t0)
+    ts = np.array(ts)
+    return (np.percentile(ts, 50), np.percentile(ts, 95))
+
+
+def run(full: bool = False):
+    out = []
+    sizes = (256, 512) if not full else (256, 512, 1024)
+    batch = 32
+    for bits in sizes:
+        key = RSA.generate_key(bits=bits, seed=bits)
+        msgs = [RSA.digest_int(f"m{i}".encode(), bits) for i in range(batch)]
+        md = RSA.messages_to_digits(msgs, key)
+        sign = jax.jit(lambda x, k=key: RSA.sign(x, k))
+        verify = jax.jit(lambda x, k=key: RSA.verify(x, k))
+        p50, p95 = _latency_percentiles(sign, md)
+        out.append(row(f"crypto/rsa{bits}/sign", p50 / batch,
+                       f"p50_ms={p50 * 1e3:.1f} p95_ms={p95 * 1e3:.1f} "
+                       f"ops_s={batch / p50:.1f}"))
+        sigs = sign(md)
+        p50, p95 = _latency_percentiles(verify, sigs)
+        out.append(row(f"crypto/rsa{bits}/verify", p50 / batch,
+                       f"p50_ms={p50 * 1e3:.1f} ops_s={batch / p50:.1f}"))
+
+    # FFDH-style: fixed generator g=2, random 256-bit exponents, 512-bit p
+    rng = np.random.default_rng(7)
+    nbits = 512
+    p = L.random_bigints(rng, 1, nbits)[0] | (1 << (nbits - 1)) | 1
+    ctx = MOD.mont_setup(p, nbits)
+    g = jnp.asarray(np.stack([L.int_to_limbs(2, ctx.m, 16)] * batch))
+    exps = np.stack([MOD.exp_bits_msb(e | (1 << 255), 256)
+                     for e in L.random_bigints(rng, batch, 256)])
+    derive = jax.jit(lambda b, e: MOD.mod_exp(b, e, ctx))
+    p50, p95 = _latency_percentiles(lambda a: derive(a, jnp.asarray(exps)), g)
+    out.append(row(f"crypto/ffdh{nbits}/derive", p50 / batch,
+                   f"p50_ms={p50 * 1e3:.1f} p95_ms={p95 * 1e3:.1f} "
+                   f"ops_s={batch / p50:.1f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

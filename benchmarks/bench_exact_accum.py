@@ -1,0 +1,46 @@
+"""Beyond-paper feature benchmark: overhead of exact deferred-carry
+gradient reduction vs plain f32 accumulation, at gradient-tree scale.
+
+The interesting number is the encode+accumulate+resolve cost relative to
+an f32 add of the same tensor -- this is what a replica pays per
+microbatch for bitwise-reproducible elastic training.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import exact_accum as EA
+from benchmarks.util import row, time_fn
+
+
+def run(full: bool = False):
+    out = []
+    rng = np.random.default_rng(5)
+    n = 1 << 20 if full else 1 << 18      # ~0.26M-1M gradient elements
+    x = jnp.asarray(rng.standard_normal((n,)).astype(np.float32))
+    acc = EA.encode(x)
+
+    t_f32 = time_fn(jax.jit(lambda a, b: a + b), x, x)
+    enc = jax.jit(EA.encode)
+    t_enc = time_fn(enc, x)
+    t_acc = time_fn(jax.jit(EA.accumulate), acc, acc)
+    t_norm = time_fn(jax.jit(lambda d: EA.decode(EA.normalize(d))), acc)
+
+    out.append(row("exact_accum/f32_add_baseline", t_f32, f"n={n}"))
+    out.append(row("exact_accum/encode", t_enc,
+                   f"overhead_vs_f32={t_enc / t_f32:.1f}x"))
+    out.append(row("exact_accum/accumulate", t_acc,
+                   f"overhead_vs_f32={t_acc / t_f32:.1f}x (deferred carries)"))
+    out.append(row("exact_accum/resolve+decode", t_norm,
+                   "amortized once per global batch"))
+    per_mb = t_enc + t_acc
+    out.append(row("exact_accum/per_microbatch_total", per_mb,
+                   f"{per_mb / t_f32:.1f}x of one f32 add"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

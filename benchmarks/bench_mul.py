@@ -1,0 +1,67 @@
+"""Paper Table 4 + Fig. 3(d): multiplication routines.
+
+256-bit base case (the integration unit) across: DoT VnC (jnp + Pallas
+kernel), MXU Toeplitz path, shared-accumulator schoolbook (Gueron-style
+RAW chain), and Karatsuba-over-DoT for larger operands.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core.mul as M
+from repro.core import limbs as L
+from repro.kernels.dot_mul import ops as mul_kernel_ops
+from benchmarks.util import hlo_ops, row, time_fn
+
+BATCH = 512
+
+
+def _limbs(rng, nbits, batch):
+    m = nbits // 32
+    xs = L.random_bigints(rng, batch, nbits)
+    ys = L.random_bigints(rng, batch, nbits)
+    return (jnp.asarray(L.ints_to_batch(xs, m)),
+            jnp.asarray(L.ints_to_batch(ys, m)))
+
+
+def run(full: bool = False):
+    rng = np.random.default_rng(1)
+    out = []
+
+    # --- Table 4: 256-bit base case ---
+    a, b = _limbs(rng, 256, BATCH)
+    variants = {
+        "dot_vnc": lambda x, y: M.mul_limbs32(x, y, method="dot"),
+        "dot_kernel": lambda x, y: mul_kernel_ops.dot_mul_limbs32(x, y),
+        "mxu_toeplitz": lambda x, y: M.mul_limbs32(x, y, method="mxu"),
+        "schoolbook_raw": lambda x, y: M.mul_limbs32(x, y, method="schoolbook"),
+    }
+    base_t = None
+    for name, f in variants.items():
+        fn = jax.jit(f)
+        t = time_fn(fn, a, b, iters=10)
+        ops = hlo_ops(f, a, b)
+        if name == "schoolbook_raw":
+            base_t = t
+        out.append(row(f"mul256/{name}", t / BATCH, f"ops={ops}"))
+    # speedup vs the shared-accumulator baseline (paper: 2.31x vs IFMA)
+    t_dot = time_fn(jax.jit(variants["dot_vnc"]), a, b, iters=10)
+    out.append(row("mul256/speedup_dot_vs_schoolbook", 0.0,
+                   f"{base_t / t_dot:.2f}x"))
+
+    # --- Fig 3(d): larger operands through Karatsuba ---
+    sizes = (512, 1024, 2048, 4096) if full else (1024, 4096)
+    for nbits in sizes:
+        a, b = _limbs(rng, nbits, 64)
+        for method in ("karatsuba", "schoolbook"):
+            fn = jax.jit(lambda x, y, mm=method: M.mul_limbs32(x, y, method=mm))
+            t = time_fn(fn, a, b, iters=5)
+            out.append(row(f"mul/{nbits}b/{method}", t / 64, ""))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

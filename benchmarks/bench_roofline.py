@@ -1,0 +1,41 @@
+"""Roofline terms per (arch x shape) from the dry-run artifacts
+(experiments/dryrun/*.json).  This is the TPU-performance benchmark: the
+CPU container cannot measure wall-time MFU, so the three terms come from
+the compiled artifacts (see launch/roofline.py for the methodology).
+Emits one row per cell: name, dominant-term seconds, derived terms.
+"""
+from __future__ import annotations
+
+import pathlib
+
+from repro.launch import roofline as R
+from benchmarks.util import row
+
+
+def run(full: bool = False, dry_dir: str = "experiments/dryrun"):
+    out = []
+    out_dir = pathlib.Path(dry_dir)
+    if not out_dir.exists():
+        return [row("roofline/missing", 0.0,
+                    "run `python -m repro.launch.dryrun --all` first")]
+    seen = set()
+    for p in sorted(out_dir.glob("*.single.base.json")):
+        arch, shape = p.name.split(".")[:2]
+        if (arch, shape) in seen:
+            continue
+        seen.add((arch, shape))
+        c = R.corrected_cell(out_dir, arch, shape, "single")
+        if not c:
+            continue
+        dom_s = max(c["t_compute"], c["t_memory"], c["t_collective"])
+        out.append(row(
+            f"roofline/{arch}/{shape}", dom_s,
+            f"dominant={c['dominant']} compute={c['t_compute']:.3e} "
+            f"memory={c['t_memory']:.3e} coll={c['t_collective']:.3e} "
+            f"frac={c['roofline_fraction']:.2f} useful={c['useful_ratio']:.2f}"))
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

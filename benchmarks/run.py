@@ -1,0 +1,54 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  bench_add         -> Fig. 3(a)/(b) + Table 1  (add/sub strategies)
+  bench_mul         -> Table 4 + Fig. 3(d)      (multiplication routines)
+  bench_breakdown   -> Tables 1 & 3             (phase-wise attribution)
+  bench_gmp         -> Fig. 4                   (GMPbench-style end-to-end)
+  bench_crypto      -> Fig. 5 + latency CDFs    (OpenSSL-speed-style)
+  bench_exact_accum -> beyond-paper             (exact grad reduction cost)
+  bench_roofline    -> EXPERIMENTS.md SSRoofline (TPU terms from the dry-run)
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` widens the operand
+grid (slower).  Individual suites: ``python -m benchmarks.bench_add``.
+"""
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names (e.g. add,mul)")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_add, bench_breakdown, bench_crypto,
+                            bench_exact_accum, bench_gmp, bench_mul,
+                            bench_roofline)
+    suites = {
+        "add": bench_add, "mul": bench_mul, "breakdown": bench_breakdown,
+        "gmp": bench_gmp, "crypto": bench_crypto,
+        "exact_accum": bench_exact_accum, "roofline": bench_roofline,
+    }
+    pick = args.only.split(",") if args.only else list(suites)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in pick:
+        mod = suites[name]
+        t0 = time.time()
+        try:
+            for line in mod.run(full=args.full):
+                print(line, flush=True)
+            print(f"# suite {name}: {time.time() - t0:.1f}s", flush=True)
+        except Exception:  # noqa: BLE001 - report and continue
+            failures += 1
+            print(f"# suite {name} FAILED:", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Benchmark helpers: median wall-time of jitted calls + HLO op counts.
+
+CPU wall-clock here orders the ALGORITHM STRUCTURES (dependency depth,
+op counts); absolute TPU performance comes from the dry-run roofline
+(benchmarks/bench_roofline.py).  "ops" counts optimized-HLO instructions
+-- the analogue of the paper's perf_event instruction counts.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median seconds per call of an already-jitted fn."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def hlo_ops(fn, *args) -> int:
+    """Instruction count of the optimized HLO module."""
+    txt = jax.jit(fn).lower(*args).compile().as_text()
+    return sum(1 for line in txt.splitlines() if " = " in line)
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

@@ -1,0 +1,31 @@
+"""Compute pi with DoT fixed-point bignums (GMPbench's pi workload,
+paper Fig. 4: the biggest end-to-end win because Machin's series is pure
+add/sub/div-small).
+
+  PYTHONPATH=src python examples/pi_digits.py --digits 200
+"""
+import argparse
+import time
+
+from repro.core import pi as P
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--digits", type=int, default=200)
+    args = ap.parse_args()
+
+    t0 = time.time()
+    got = P.pi_digits(args.digits)
+    dt = time.time() - t0
+    want = P.pi_reference(args.digits)
+    match = sum(1 for a, b in zip(got, want) if a == b)
+    print(f"pi ({args.digits} digits, {dt:.2f}s):")
+    print(got)
+    print(f"matches Python-int oracle on {match}/{len(want)} chars "
+          f"(trailing digits differ only by guard rounding)")
+    assert got[: args.digits - 4] == want[: args.digits - 4]
+
+
+if __name__ == "__main__":
+    main()

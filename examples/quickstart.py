@@ -1,0 +1,69 @@
+"""Quickstart: DigitsOnTurbo arithmetic + a tiny LM training run.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import add as A
+from repro.core import limbs as L
+from repro.core import mul as M
+
+
+def bignum_demo():
+    print("=== DoT big-number arithmetic (paper Algorithms 1 & 2) ===")
+    rng = np.random.default_rng(0)
+    nbits = 2048
+    m = nbits // 32
+    batch = 1024
+
+    xs = L.random_bigints(rng, batch, nbits)
+    ys = L.random_bigints(rng, batch, nbits)
+    a = jnp.asarray(L.ints_to_batch(xs, m))
+    b = jnp.asarray(L.ints_to_batch(ys, m))
+
+    s, c = jax.jit(A.dot_add)(a, b)
+    ok = all(L.limbs_to_int(np.asarray(s)[i]) +
+             (int(np.asarray(c)[i]) << nbits) == xs[i] + ys[i]
+             for i in range(8))
+    print(f"dot_add: {batch} x {nbits}-bit adds, correct={ok}")
+
+    p = jax.jit(lambda x, y: M.mul_limbs32(x, y, method='auto'))(a, b)
+    ok = all(L.limbs_to_int(np.asarray(p)[i]) == xs[i] * ys[i]
+             for i in range(4))
+    print(f"dot_mul (Karatsuba over DoT base case): correct={ok}")
+
+    # strategy comparison (CPU wall-clock; see benchmarks/ for the full grid)
+    for name in ("seq", "two_level_ksa", "carry_select", "dot"):
+        fn = jax.jit(lambda x, y, n=name: A.ADD_STRATEGIES[n](x, y))
+        fn(a, b)[0].block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(20):
+            fn(a, b)[0].block_until_ready()
+        dt = (time.perf_counter() - t0) / 20
+        print(f"  add[{name:>14s}]: {dt * 1e6:8.1f} us / {batch} adds")
+
+
+def tiny_lm_demo():
+    print("\n=== 30-step LM training (reduced smollm, synthetic data) ===")
+    from repro.configs import get_config
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.models import build_model
+    from repro.train import optimizer as OPT
+    from repro.train import trainer as T
+
+    cfg = get_config("smollm_135m", reduced=True).replace(remat="none")
+    model = build_model(cfg)
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 32, 8))
+    tcfg = T.TrainerConfig(opt=OPT.OptConfig(lr=5e-3, warmup_steps=3,
+                                             total_steps=30))
+    _, _, hist = T.train_loop(model, tcfg, data, steps=30)
+    print(f"loss: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    bignum_demo()
+    tiny_lm_demo()

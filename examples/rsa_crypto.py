@@ -1,0 +1,56 @@
+"""Batched RSA sign/verify on the DoT Montgomery stack (the OpenSSL-speed
+analogue, paper Fig. 5): thousands of independent modexps vectorized over
+TPU lanes.
+
+  PYTHONPATH=src python examples/rsa_crypto.py --bits 512 --batch 32
+"""
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import limbs as L
+from repro.core import rsa as R
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bits", type=int, default=512)
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+
+    key = R.generate_key(bits=args.bits, seed=1)
+    msgs = [R.digest_int(f"message-{i}".encode(), args.bits)
+            for i in range(args.batch)]
+    md = R.messages_to_digits(msgs, key)
+
+    sign = jax.jit(lambda m: R.sign(m, key))
+    verify = jax.jit(lambda s: R.verify(s, key))
+
+    sigs = sign(md)
+    sigs.block_until_ready()
+    t0 = time.time()
+    sigs = sign(md)
+    sigs.block_until_ready()
+    t_sign = time.time() - t0
+
+    back = verify(sigs)
+    back.block_until_ready()
+    t0 = time.time()
+    back = verify(sigs)
+    back.block_until_ready()
+    t_verify = time.time() - t0
+
+    ok = all(L.limbs_to_int(np.asarray(back)[i], 16) == msgs[i] % key.n
+             for i in range(args.batch))
+    print(f"RSA-{args.bits}: batch={args.batch} roundtrip correct={ok}")
+    print(f"  sign:   {t_sign * 1e3:8.1f} ms  ({args.batch / t_sign:7.1f} ops/s)")
+    print(f"  verify: {t_verify * 1e3:8.1f} ms  ({args.batch / t_verify:7.1f} ops/s)")
+    # oracle check on one signature
+    assert L.limbs_to_int(np.asarray(sigs)[0], 16) == pow(
+        msgs[0] % key.n, key.d, key.n)
+
+
+if __name__ == "__main__":
+    main()

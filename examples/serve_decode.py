@@ -1,0 +1,10 @@
+"""Serve a small model with batched requests through the slot engine.
+
+  PYTHONPATH=src python examples/serve_decode.py
+"""
+from repro.launch import serve as serve_launch
+
+if __name__ == "__main__":
+    serve_launch.main(["--arch", "gemma2_2b", "--reduced",
+                       "--requests", "6", "--prompt-len", "8",
+                       "--max-new", "12", "--slots", "3"])

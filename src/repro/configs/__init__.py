@@ -1,0 +1,32 @@
+"""Registry of assigned architecture configs (+ the paper's own workload).
+
+Each module exports CONFIG (the exact published configuration) and
+REDUCED (a same-family miniature for CPU smoke tests).
+"""
+import importlib
+
+ARCH_IDS = (
+    "granite_3_8b",
+    "gemma2_2b",
+    "minicpm3_4b",
+    "smollm_135m",
+    "dbrx_132b",
+    "olmoe_1b_7b",
+    "zamba2_1_2b",
+    "llava_next_34b",
+    "rwkv6_1_6b",
+    "seamless_m4t_large_v2",
+)
+
+# canonical hyphenated ids (CLI) -> module name
+ALIASES = {a.replace("_", "-"): a for a in ARCH_IDS}
+
+
+def get_config(arch: str, reduced: bool = False):
+    mod_name = ALIASES.get(arch, arch).replace("-", "_")
+    mod = importlib.import_module(f"repro.configs.{mod_name}")
+    return mod.REDUCED if reduced else mod.CONFIG
+
+
+def all_configs(reduced: bool = False):
+    return {a: get_config(a, reduced) for a in ARCH_IDS}

@@ -1,0 +1,21 @@
+"""dbrx-132b [moe]: 40L d6144 48H (GQA kv=8) d_ff=10752/expert
+vocab=100352, 16 experts top-4 (fine-grained).
+
+[hf:databricks/dbrx-base; unverified]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="dbrx-132b", family="moe",
+    num_layers=40, d_model=6144, vocab_size=100352, d_ff=10752,
+    num_heads=48, num_kv_heads=8, head_dim=128,
+    num_experts=16, top_k=4, rope_theta=500_000.0,
+    capacity_factor=1.0,   # SSPerf cell 1 iter 5: buffers scale with cf
+
+    remat="full",
+)
+
+REDUCED = CONFIG.replace(
+    name="dbrx-132b-reduced", num_layers=2, d_model=128, d_ff=128,
+    num_heads=4, num_kv_heads=2, head_dim=32, vocab_size=256,
+    num_experts=4, top_k=2, q_chunk=64)

@@ -1,0 +1,27 @@
+"""The paper's own workload config: DoT large-number arithmetic.
+
+Operand sizes follow the paper's evaluation grid (sec 4): twelve sizes
+from 512 to 32768 bits, batched to fill TPU lanes; 256-bit base-case
+multiplication (Table 4); GMPbench-style end-to-end apps (pi, modexp).
+"""
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class DoTBenchConfig:
+    operand_bits: Tuple[int, ...] = (
+        512, 1024, 2048, 3072, 4096, 6144, 8192, 12288,
+        16384, 20480, 24576, 32768)
+    batch: int = 4096                 # independent operations per call
+    mul_base_bits: int = 256          # base-case multiply (Table 4)
+    karatsuba_threshold_digits: int = 16
+    pathological_batch: int = 64
+    rsa_bits: Tuple[int, ...] = (512, 1024, 2048)
+    pi_digits: int = 1000
+
+
+CONFIG = DoTBenchConfig()
+REDUCED = DoTBenchConfig(
+    operand_bits=(512, 1024), batch=64, pathological_batch=8,
+    rsa_bits=(512,), pi_digits=100)

@@ -1,0 +1,22 @@
+"""gemma2-2b [dense]: 26L d2304 8H (GQA kv=4) d_ff=9216 vocab=256000.
+
+[arXiv:2408.00118; hf]  Alternating local(4096)/global attention,
+attn logit softcap 50, final softcap 30, GeGLU, post-block norms,
+sqrt(d) embedding scaling.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma2-2b", family="dense",
+    num_layers=26, d_model=2304, vocab_size=256000, d_ff=9216,
+    num_heads=8, num_kv_heads=4, head_dim=256,
+    attn_pattern="local_global", local_window=4096,
+    attn_softcap=50.0, final_softcap=30.0, post_norms=True,
+    mlp_act="gelu", embed_scale=True,
+    remat="full",
+)
+
+REDUCED = CONFIG.replace(
+    name="gemma2-2b-reduced", num_layers=4, d_model=128, d_ff=256,
+    num_heads=4, num_kv_heads=2, head_dim=32, vocab_size=256,
+    local_window=16, q_chunk=64)

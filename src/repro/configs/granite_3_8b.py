@@ -1,0 +1,17 @@
+"""granite-3-8b [dense]: 40L d4096 32H (GQA kv=8) d_ff=12800 vocab=49155.
+
+[hf:ibm-granite/granite-3.0-8b-base; hf]  Llama-style GQA dense decoder.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-8b", family="dense",
+    num_layers=40, d_model=4096, vocab_size=49155, d_ff=12800,
+    num_heads=32, num_kv_heads=8, head_dim=128,
+    rope_theta=10_000_000.0,
+    remat="full",
+)
+
+REDUCED = CONFIG.replace(
+    name="granite-3-8b-reduced", num_layers=2, d_model=128, d_ff=256,
+    num_heads=4, num_kv_heads=2, head_dim=32, vocab_size=256, q_chunk=64)

@@ -1,0 +1,23 @@
+"""llava-next-34b [vlm]: 60L d7168 56H (GQA kv=8) d_ff=20480 vocab=64000,
+anyres tiling -> 2880 image tokens (frontend STUB: input_specs provides
+precomputed patch embeddings at d_model).
+
+[hf:llava-hf/llava-v1.6-34b-hf; unverified]
+TP note: 56 q-heads are not divisible by the 16-way model axis; the
+dry-run config pads q-heads to 64 (kv stays 8; group=8).  Recorded in
+DESIGN.md SSArch-applicability.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b", family="vlm",
+    num_layers=60, d_model=7168, vocab_size=64000, d_ff=20480,
+    num_heads=56, num_kv_heads=8, head_dim=128,
+    num_image_tokens=2880, pad_heads_to=64, rope_theta=5_000_000.0,
+    remat="full",
+)
+
+REDUCED = CONFIG.replace(
+    name="llava-next-34b-reduced", num_layers=2, d_model=128, d_ff=256,
+    num_heads=4, num_kv_heads=2, head_dim=32, vocab_size=256,
+    num_image_tokens=8, pad_heads_to=0, q_chunk=64)

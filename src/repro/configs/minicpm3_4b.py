@@ -1,0 +1,22 @@
+"""minicpm3-4b [dense/MLA]: 62L d2560 40H d_ff=6400 vocab=73448.
+
+[hf:openbmb/MiniCPM3-4B; hf]  Multi-head Latent Attention:
+q_lora 768, kv_lora 256, qk_nope 64, qk_rope 32, v_head 64.
+Decode uses the absorbed (latent-space) form.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="minicpm3-4b", family="mla",
+    num_layers=62, d_model=2560, vocab_size=73448, d_ff=6400,
+    num_heads=40, num_kv_heads=40, head_dim=96,
+    q_lora_rank=768, kv_lora_rank=256,
+    qk_nope_dim=64, qk_rope_dim=32, v_head_dim=64,
+    remat="full",
+)
+
+REDUCED = CONFIG.replace(
+    name="minicpm3-4b-reduced", num_layers=2, d_model=128, d_ff=256,
+    num_heads=4, num_kv_heads=4, head_dim=48, vocab_size=256,
+    q_lora_rank=64, kv_lora_rank=32, qk_nope_dim=16, qk_rope_dim=8,
+    v_head_dim=16, q_chunk=64)

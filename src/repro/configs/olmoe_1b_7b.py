@@ -1,0 +1,19 @@
+"""olmoe-1b-7b [moe]: 16L d2048 16H (GQA kv=16) d_ff=1024/expert
+vocab=50304, 64 experts top-8.
+
+[arXiv:2409.02060; hf]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b", family="moe",
+    num_layers=16, d_model=2048, vocab_size=50304, d_ff=1024,
+    num_heads=16, num_kv_heads=16, head_dim=128,
+    num_experts=64, top_k=8,
+    remat="full",
+)
+
+REDUCED = CONFIG.replace(
+    name="olmoe-1b-7b-reduced", num_layers=2, d_model=128, d_ff=64,
+    num_heads=4, num_kv_heads=4, head_dim=32, vocab_size=256,
+    num_experts=8, top_k=2, q_chunk=64)

@@ -1,0 +1,19 @@
+"""rwkv6-1.6b "Finch" [ssm]: 24L d2048 (attention-free) d_ff=7168
+vocab=65536, data-dependent per-channel decay.
+
+[arXiv:2404.05892; unverified]  Sub-quadratic: runs the long_500k cell.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b", family="ssm",
+    num_layers=24, d_model=2048, vocab_size=65536, d_ff=7168,
+    rwkv_head_dim=64, rwkv_chunk=32, sub_quadratic=True,
+    tie_embeddings=False,
+    remat="dots",   # small model: saving matmul outputs avoids
+    # re-running forward collectives during backward (SSPerf cell 2, iter 1)
+)
+
+REDUCED = CONFIG.replace(
+    name="rwkv6-1.6b-reduced", num_layers=2, d_model=128, d_ff=256,
+    vocab_size=256, rwkv_head_dim=32, rwkv_chunk=8, q_chunk=64)

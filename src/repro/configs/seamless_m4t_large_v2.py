@@ -1,0 +1,21 @@
+"""seamless-m4t-large-v2 [audio]: enc-dec 24L+24L d1024 16H (kv=16)
+d_ff=8192 vocab=256206.  The speech frontend is a STUB: input_specs
+provides precomputed frame embeddings (seq_len // 4 frames at d_model).
+
+[arXiv:2308.11596; hf]
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2", family="audio",
+    num_layers=48, enc_layers=24, dec_layers=24,
+    d_model=1024, vocab_size=256206, d_ff=8192,
+    num_heads=16, num_kv_heads=16, head_dim=64,
+    enc_frames_ratio=4, tie_embeddings=False,
+    remat="full",
+)
+
+REDUCED = CONFIG.replace(
+    name="seamless-reduced", num_layers=4, enc_layers=2, dec_layers=2,
+    d_model=128, d_ff=256, num_heads=4, num_kv_heads=4, head_dim=32,
+    vocab_size=256, q_chunk=64)

@@ -1,0 +1,17 @@
+"""smollm-135m [dense]: 30L d576 9H (GQA kv=3) d_ff=1536 vocab=49152.
+
+[hf:HuggingFaceTB/SmolLM-135M; hf]  Llama-arch small model; also the
+end-to-end training-example target (examples/train_smollm.py).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="smollm-135m", family="dense",
+    num_layers=30, d_model=576, vocab_size=49152, d_ff=1536,
+    num_heads=9, num_kv_heads=3, head_dim=64,
+    remat="full",
+)
+
+REDUCED = CONFIG.replace(
+    name="smollm-135m-reduced", num_layers=2, d_model=96, d_ff=192,
+    num_heads=3, num_kv_heads=1, head_dim=32, vocab_size=256, q_chunk=64)

@@ -1,0 +1,22 @@
+"""zamba2-1.2b [hybrid]: 38 Mamba2 layers d2048, ssm_state=64, plus ONE
+weight-shared attention block (32H kv=32, d_ff 8192) applied every 6
+mamba layers on concat(hidden, embeddings).
+
+[arXiv:2411.15242; hf]  Sub-quadratic: runs the long_500k cell.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b", family="hybrid",
+    num_layers=38, d_model=2048, vocab_size=32000, d_ff=8192,
+    num_heads=32, num_kv_heads=32, head_dim=64,
+    ssm_state=64, ssm_expand=2, ssm_head_dim=64, ssm_conv=4, ssm_chunk=128,
+    shared_attn_every=6, sub_quadratic=True,
+    remat="full",
+)
+
+REDUCED = CONFIG.replace(
+    name="zamba2-1.2b-reduced", num_layers=5, d_model=128, d_ff=256,
+    num_heads=4, num_kv_heads=4, head_dim=32,
+    ssm_state=16, ssm_head_dim=32, ssm_chunk=16,
+    shared_attn_every=2, vocab_size=256, q_chunk=64)

@@ -1,0 +1,43 @@
+"""repro.core: DigitsOnTurbo (DoT) large-number arithmetic in JAX.
+
+The paper's primary contribution, restructured for TPU:
+  add.py      -- 4-phase DoT addition/subtraction + prior-work baselines
+  mul.py      -- vertical-and-crosswise multiplication (VPU + MXU paths),
+                 schoolbook baseline, Karatsuba with a DoT base case
+  modular.py  -- Montgomery multiplication / modular exponentiation (the
+                 OpenSSL-integration analogue: batched RSA/DH primitives)
+  exact_accum -- deferred-carry fixed-point accumulation: the paper's
+                 technique as a distributed-training feature (bitwise
+                 deterministic, order-invariant gradient reduction)
+  limbs.py    -- representations + host-side conversions/test vectors
+"""
+from repro.core import limbs
+from repro.core.add import (
+    ADD_STRATEGIES,
+    SUB_STRATEGIES,
+    add_jit,
+    add_carry_select,
+    add_ksa,
+    add_naive_simd,
+    add_seq,
+    add_two_level,
+    dot_add,
+    dot_add_unconditional,
+    dot_sub,
+    dot_sub_unconditional,
+    sub_jit,
+    sub_seq,
+)
+from repro.core.mul import (
+    dot_mul,
+    dot_mul_mxu,
+    join_digits,
+    mul_jit,
+    mul_karatsuba,
+    mul_limbs32,
+    mul_schoolbook,
+    normalize_digits,
+    normalize_digits_scan,
+    split_digits,
+)
+from repro.core import exact_accum, gcd, modular, pi, rsa

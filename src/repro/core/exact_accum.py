@@ -1,0 +1,196 @@
+"""Exact, order-invariant gradient accumulation via deferred-carry limbs.
+
+This is the paper's central insight applied to distributed training:
+DoT defers carry propagation so the data-parallel work (limb adds) runs
+carry-free, with a single resolution pass at the end.  Here the "lanes"
+are gradient elements and the "adds" are cross-replica reductions:
+
+  1. quantize each f32 gradient to a fixed-point int (deterministic),
+  2. split into L unsaturated radix-2**r digits (headroom = 32 - r bits),
+  3. psum the digit planes across replicas -- integer adds are exactly
+     associative AND commutative, so the result is bitwise identical for
+     ANY reduction order, replica count, or mesh shape (elastic rescaling
+     keeps bit-exact training curves),
+  4. resolve carries ONCE (DoT-style deferred passes + Kogge-Stone tail),
+  5. convert back to f32.
+
+With r = 20 and L = 4 the accumulator spans 80 bits: up to 2**(31-20) =
+2048 addends sum with NO intermediate carry handling at all (phase-2/3 of
+the paper never even run until the end).  Plain f32 psum is neither
+order- nor topology-invariant; bf16 compression is worse.  See
+tests/test_exact_accum.py for the bitwise-invariance property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ExactAccumConfig:
+    frac_bits: int = 24          # fixed-point resolution: 2**-24 absolute
+    radix_bits: int = 20         # digit width; headroom = 32 - radix_bits
+    num_limbs: int = 4           # accumulator range: radix_bits * num_limbs
+    clip: float = 64.0           # |values| clipped to keep q in int32
+
+    @property
+    def headroom_addends(self) -> int:
+        """How many addends can accumulate with zero carry handling."""
+        return 1 << (31 - self.radix_bits)
+
+    @property
+    def total_bits(self) -> int:
+        return self.radix_bits * self.num_limbs
+
+
+DEFAULT = ExactAccumConfig()
+
+
+def encode(x: jax.Array, cfg: ExactAccumConfig = DEFAULT) -> jax.Array:
+    """f32 (...,) -> uint32 (..., L) two's-complement digit planes."""
+    q = jnp.round(jnp.clip(x.astype(F32), -cfg.clip, cfg.clip)
+                  * (2.0 ** cfg.frac_bits)).astype(I32)
+    u = q.astype(U32)  # two's complement bits
+    r = cfg.radix_bits
+    mask = jnp.uint32((1 << r) - 1)
+    digits = []
+    neg_fill = jnp.where(q < 0, mask, jnp.uint32(0))
+    for k in range(cfg.num_limbs):
+        lo_bit = r * k
+        if lo_bit < 32:
+            d = (u >> jnp.uint32(lo_bit))
+            if lo_bit + r > 32:
+                # splice in sign-extension bits above bit 31
+                ext_bits = lo_bit + r - 32
+                ext = jnp.where(q < 0, jnp.uint32((1 << ext_bits) - 1),
+                                jnp.uint32(0))
+                d = d | (ext << jnp.uint32(32 - lo_bit))
+            digits.append(d & mask)
+        else:
+            digits.append(neg_fill)
+    return jnp.stack(digits, axis=-1)
+
+
+def accumulate(acc: jax.Array, digits: jax.Array) -> jax.Array:
+    """Deferred-carry add: plain elementwise uint32 adds, NO carry work.
+
+    Safe for up to cfg.headroom_addends accumulations between normalize()
+    calls (the caller asserts this budget; see train/trainer.py).
+    """
+    return acc + digits
+
+
+def normalize(acc: jax.Array, cfg: ExactAccumConfig = DEFAULT) -> jax.Array:
+    """Resolve deferred carries mod 2**(r*L): two DoT passes + KS tail.
+
+    After accumulation each digit holds < 2**31; two deferred passes bring
+    every digit to <= 2**r, and a Kogge-Stone generate/propagate pass
+    resolves the remaining 0/1 carries exactly (branch-free; this is the
+    same Phase-4 structure as DoT addition).
+    """
+    r = jnp.uint32(cfg.radix_bits)
+    mask = jnp.uint32((1 << cfg.radix_bits) - 1)
+
+    def shift_up(c):
+        return jnp.concatenate(
+            [jnp.zeros(c.shape[:-1] + (1,), U32), c[..., :-1]], axis=-1)
+
+    # two deferred-carry passes (digit <= 2**r afterwards)
+    for _ in range(2):
+        acc = (acc & mask) + shift_up(acc >> r)
+    # Kogge-Stone tail on the residual 0/1 carries
+    g = (acc >> r).astype(U32)           # digit generated (value == 2**r)
+    low = acc & mask
+    p = (low == mask).astype(U32)
+
+    def combine(lo, hi):
+        g1, p1 = lo
+        g2, p2 = hi
+        return g2 | (p2 & g1), p2 & p1
+
+    G, P = jax.lax.associative_scan(combine, (g, p), axis=-1)
+    c = shift_up(G)
+    return (low + c) & mask              # overflow beyond L limbs wraps (mod)
+
+
+def _resolve_unit_carries(t: jax.Array, cfg: ExactAccumConfig) -> jax.Array:
+    """Digits <= 2**r with 0/1 residual carries -> normalized (KS tail)."""
+    r = jnp.uint32(cfg.radix_bits)
+    mask = jnp.uint32((1 << cfg.radix_bits) - 1)
+    g = (t >> r).astype(U32)
+    low = t & mask
+    p = (low == mask).astype(U32)
+
+    def combine(lo, hi):
+        g1, p1 = lo
+        g2, p2 = hi
+        return g2 | (p2 & g1), p2 & p1
+
+    G, P = jax.lax.associative_scan(combine, (g, p), axis=-1)
+    c = jnp.concatenate(
+        [jnp.zeros(G.shape[:-1] + (1,), U32), G[..., :-1]], axis=-1)
+    return (low + c) & mask
+
+
+def decode(acc: jax.Array, cfg: ExactAccumConfig = DEFAULT) -> jax.Array:
+    """Normalized digit planes -> f32 (two's complement interpretation).
+
+    Negatives are complemented in the INTEGER domain first: converting
+    2**(rL) - |v| to f32 and subtracting 2**(rL) would round |v| away
+    entirely (ulp(2**80) >> any gradient sum)."""
+    r = cfg.radix_bits
+    mask = jnp.uint32((1 << r) - 1)
+    # sign bit: top bit of the top digit
+    neg = (acc[..., -1] >> jnp.uint32(r - 1)) & jnp.uint32(1)
+    # |v| for negatives: complement + 1, carries resolved exactly
+    comp = (mask - acc).at[..., 0].add(1)
+    mag_neg = _resolve_unit_carries(comp, cfg)
+    digits = jnp.where(neg[..., None] == 1, mag_neg, acc)
+    val = jnp.zeros(acc.shape[:-1], F32)
+    for k in reversed(range(cfg.num_limbs)):
+        val = val * float(1 << r) + digits[..., k].astype(F32)
+    val = jnp.where(neg == 1, -val, val)
+    return val * (2.0 ** -cfg.frac_bits)
+
+
+def exact_psum(digits: jax.Array, axis_name,
+               cfg: ExactAccumConfig = DEFAULT) -> jax.Array:
+    """Order-invariant cross-replica sum of encoded digit planes."""
+    summed = jax.lax.psum(digits, axis_name)
+    return normalize(summed, cfg)
+
+
+# -- pytree convenience ------------------------------------------------------
+
+def tree_encode(tree, cfg: ExactAccumConfig = DEFAULT):
+    return jax.tree.map(lambda x: encode(x, cfg), tree)
+
+
+def tree_decode(tree, cfg: ExactAccumConfig = DEFAULT):
+    return jax.tree.map(lambda d: decode(normalize(d, cfg), cfg), tree)
+
+
+def tree_accumulate(acc_tree, tree):
+    return jax.tree.map(accumulate, acc_tree, tree)
+
+
+def exact_reduce(x: jax.Array, n_chunks: int,
+                 cfg: ExactAccumConfig = DEFAULT) -> jax.Array:
+    """Single-host reference reduction: sum x over axis 0 exactly.
+
+    Used by tests/benchmarks to demonstrate order invariance without a
+    multi-device mesh: any permutation/regrouping of axis 0 produces a
+    bitwise-identical result.
+    """
+    digits = encode(x, cfg)
+    acc = digits.sum(axis=0, dtype=U32)     # associative integer adds
+    return decode(normalize(acc, cfg), cfg)

@@ -1,0 +1,118 @@
+"""Batched binary GCD on DoT digit arithmetic (GMPbench's gcd aggregate).
+
+The paper's Fig. 4 shows GCD improving +3.1% purely because GMP's
+Lehmer-Euclid bottoms out in large add/sub -- the cascade effect.  Here
+the whole algorithm is built from DoT primitives: digit-wise compare,
+radix-complement subtraction with deferred carries, and vectorized
+shifts, batched over lanes (every branch of the classic binary GCD
+becomes a masked select, so thousands of GCDs advance per vector step).
+
+Iteration bound: each step strictly reduces bitlen(u)+bitlen(v) by >= 1,
+so 2*nbits steps suffice; the while_loop exits as soon as every lane's v
+reaches zero.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+DIGIT_BITS = 16
+MASK = jnp.uint32(0xFFFF)
+
+
+def _is_even(x):
+    return (x[..., 0] & jnp.uint32(1)) == 0
+
+
+def _is_zero(x):
+    return jnp.all(x == 0, axis=-1)
+
+
+def _shr1(x):
+    """x >> 1 across digits (little-endian)."""
+    hi = jnp.concatenate(
+        [x[..., 1:], jnp.zeros(x.shape[:-1] + (1,), U32)], axis=-1)
+    return (x >> jnp.uint32(1)) | ((hi & jnp.uint32(1)) << jnp.uint32(15))
+
+
+def _shl1(x):
+    """x << 1 across digits (mod B**m)."""
+    lo = jnp.concatenate(
+        [jnp.zeros(x.shape[:-1] + (1,), U32), x[..., :-1]], axis=-1)
+    return ((x << jnp.uint32(1)) & MASK) | (lo >> jnp.uint32(15))
+
+
+def _ge(a, b):
+    """a >= b, digit arrays, lexicographic from the top (vector scan)."""
+    gt = (a > b).astype(jnp.int32)
+    lt = (a < b).astype(jnp.int32)
+    diff = gt - lt
+
+    def step(carry, d):
+        return jnp.where(d != 0, d, carry), None
+
+    d_t = jnp.moveaxis(diff, -1, 0)
+    out, _ = jax.lax.scan(step, jnp.zeros(a.shape[:-1], jnp.int32), d_t)
+    return out >= 0
+
+
+def _sub(a, b):
+    """a - b (a >= b), radix complement + deferred-carry resolve."""
+    from repro.core.mul import normalize_digits
+    comp = (MASK - b) & MASK
+    t = (a + comp).at[..., 0].add(1)
+    return normalize_digits(t, DIGIT_BITS)
+
+
+def gcd(u: jax.Array, v: jax.Array) -> jax.Array:
+    """Batched gcd of (..., m) radix-2**16 digit arrays."""
+    u = jnp.asarray(u, U32)
+    v = jnp.asarray(v, U32)
+    m = u.shape[-1]
+    shift = jnp.zeros(u.shape[:-1], U32)
+
+    def cond(state):
+        u, v, shift = state
+        return jnp.any(~_is_zero(v))
+
+    def body(state):
+        u, v, shift = state
+        active = ~_is_zero(v)
+        uz = _is_zero(u) & active          # gcd(0, v) = v: move v into u
+        ue, ve = _is_even(u), _is_even(v)
+        act = active & ~uz
+        both = act & ue & ve
+        only_u = act & ue & ~ve
+        only_v = act & ~ue & ve
+        odd = act & ~ue & ~ve
+        uge = _ge(u, v)
+
+        u_new = jnp.where(both[..., None] | only_u[..., None], _shr1(u), u)
+        v_new = jnp.where(both[..., None] | only_v[..., None], _shr1(v), v)
+        # both odd: subtract the smaller from the larger, then halve
+        du = _shr1(_sub(u, v))     # valid where u >= v
+        dv = _shr1(_sub(v, u))     # valid where v >  u
+        u_new = jnp.where((odd & uge)[..., None], du, u_new)
+        v_new = jnp.where((odd & ~uge)[..., None], dv, v_new)
+        # u == 0 lane: u <- v, v <- 0 (terminates the lane next check)
+        u_new = jnp.where(uz[..., None], v, u_new)
+        v_new = jnp.where(uz[..., None], jnp.zeros_like(v), v_new)
+        shift = shift + both.astype(U32)
+        return u_new, v_new, shift
+
+    u, v, shift = jax.lax.while_loop(cond, body, (u, v, shift))
+
+    # result = u << shift  (per-lane shift count; repeated doubling)
+    def cond2(state):
+        u, shift = state
+        return jnp.any(shift > 0)
+
+    def body2(state):
+        u, shift = state
+        doit = shift > 0
+        u = jnp.where(doit[..., None], _shl1(u), u)
+        return u, shift - doit.astype(U32)
+
+    u, _ = jax.lax.while_loop(cond2, body2, (u, shift))
+    return u

@@ -1,0 +1,207 @@
+"""Limb-array representation for large-number arithmetic (DigitsOnTurbo on TPU).
+
+Conventions
+-----------
+* A big integer is an array of unsigned limbs in **little-endian** order:
+  limb 0 is the least significant.  The limb axis is ALWAYS the last axis.
+  Leading axes are batch ("lane") axes: on TPU the VPU's (8, 128) vreg grid
+  plays the role that AVX-512's 8x64-bit lanes play in the paper, and the
+  batch axis is how a TPU additionally amortizes the carry machinery over
+  thousands of independent operations.
+
+* Saturated radix: 32-bit limbs held in ``uint32``.  The paper uses 64-bit
+  saturated limbs because x86-64's scalar ALU is 64-bit; the TPU VPU is a
+  32-bit machine, so the TPU-native saturated radix is 2**32.
+
+* Unsaturated radix ("digits"): ``digit_bits < 32`` digits held in uint32
+  (or int8 for the MXU path).  This is the analogue of AVX-512IFMA's
+  52-bits-in-64 representation (paper sec 2.1/3.3):
+    - 16-in-32 for the VPU multiply path  (products fit exactly in uint32,
+      mirroring vpmadd52's lo/hi split),
+    - 7-in-8   for the MXU multiply path  (int8 x int8 -> int32 matmul),
+    - (32-h)-in-32 for exact deferred-carry accumulation across replicas.
+
+All host-side conversions are numpy; everything jit-able lives in add.py /
+mul.py / modular.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+LIMB_BITS = 32
+LIMB_DTYPE = np.uint32
+LIMB_BASE = 1 << LIMB_BITS
+LIMB_MAX = LIMB_BASE - 1
+
+
+@dataclasses.dataclass(frozen=True)
+class RadixSpec:
+    """Describes a limb/digit representation.
+
+    bits:    number of payload bits per stored element (radix = 2**bits).
+    dtype:   storage dtype.
+    name:    human-readable tag used by benchmarks / tables.
+    """
+
+    bits: int
+    dtype: np.dtype
+    name: str
+
+    @property
+    def base(self) -> int:
+        return 1 << self.bits
+
+    @property
+    def mask(self) -> int:
+        return self.base - 1
+
+    def limbs_for_bits(self, nbits: int) -> int:
+        return -(-nbits // self.bits)
+
+
+SATURATED32 = RadixSpec(32, np.dtype(np.uint32), "saturated-32")
+DIGIT16 = RadixSpec(16, np.dtype(np.uint32), "unsaturated-16in32")
+DIGIT8_MXU = RadixSpec(7, np.dtype(np.int8), "unsaturated-7in8-mxu")
+
+
+# ---------------------------------------------------------------------------
+# Python int <-> limb array conversions (host side, arbitrary precision
+# oracle glue; Python ints ARE the reference bignum implementation that every
+# test checks against).
+# ---------------------------------------------------------------------------
+
+def int_to_limbs(value: int, m: int, bits: int = LIMB_BITS,
+                 dtype=LIMB_DTYPE) -> np.ndarray:
+    """Little-endian limb decomposition of a non-negative Python int."""
+    if value < 0:
+        raise ValueError("int_to_limbs expects a non-negative integer")
+    if value >= (1 << (bits * m)):
+        raise ValueError(f"value needs more than {m} limbs of {bits} bits")
+    mask = (1 << bits) - 1
+    out = np.zeros((m,), dtype=dtype)
+    for i in range(m):
+        out[i] = (value >> (bits * i)) & mask
+    return out
+
+
+def limbs_to_int(limbs: np.ndarray, bits: int = LIMB_BITS) -> int:
+    """Inverse of int_to_limbs for a single (non-batched) limb vector."""
+    limbs = np.asarray(limbs)
+    value = 0
+    for i in range(limbs.shape[-1]):
+        value |= int(limbs[..., i]) << (bits * i)
+    return value
+
+
+def ints_to_batch(values: Sequence[int], m: int, bits: int = LIMB_BITS,
+                  dtype=LIMB_DTYPE) -> np.ndarray:
+    """(N,) python ints -> (N, m) limb batch."""
+    return np.stack([int_to_limbs(v, m, bits, dtype) for v in values])
+
+
+def batch_to_ints(batch: np.ndarray, bits: int = LIMB_BITS) -> list[int]:
+    batch = np.asarray(batch)
+    flat = batch.reshape(-1, batch.shape[-1])
+    return [limbs_to_int(row, bits) for row in flat]
+
+
+# ---------------------------------------------------------------------------
+# Test-vector generation (paper sec 4: random + pathological cases)
+# ---------------------------------------------------------------------------
+
+def random_bigints(rng: np.random.Generator, batch: int, nbits: int) -> list[int]:
+    """Uniform random nbits-bit integers (paper's "random" population)."""
+    out = []
+    for _ in range(batch):
+        raw = rng.integers(0, 1 << 63, size=-(-nbits // 63), dtype=np.int64)
+        v = 0
+        for j, r in enumerate(raw):
+            v |= int(r) << (63 * j)
+        out.append(v & ((1 << nbits) - 1))
+    return out
+
+
+def pathological_pairs(nbits: int, bits: int = LIMB_BITS) -> list[tuple[int, int]]:
+    """Adversarial operand pairs that maximize carry/borrow cascades.
+
+    These mirror the paper's "pathological" population: full carry
+    propagation, maxed-out limbs, zero limbs, alternating patterns.
+    """
+    full = (1 << nbits) - 1
+    m = -(-nbits // bits)
+    base = 1 << bits
+    alt_lo = 0
+    alt_hi = 0
+    for i in range(m):
+        if i % 2 == 0:
+            alt_lo |= (base - 1) << (bits * i)
+        else:
+            alt_hi |= (base - 1) << (bits * i)
+    return [
+        (full, 1),                      # carry cascades through every limb
+        (full, full),                   # all limbs generate
+        (full - 1, 1),                  # almost-cascade (stops at limb 0)
+        (1 << (nbits - 1), 1 << (nbits - 1)),  # single carry out of the top
+        (alt_lo, alt_hi),               # alternating max/zero limbs
+        (alt_lo, alt_lo),               # generate on even limbs only
+        (0, 0),                         # all zero
+        (full, 0),                      # max + zero (no carries at all)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Radix repacking (saturated 32-bit limbs <-> smaller digits).
+#
+# General bit-exact repack: digit j of width ``to_bits`` covers bit range
+# [to_bits*j, to_bits*(j+1)), which may straddle a 32-bit limb boundary.
+# We gather the (at most two) source limbs per digit and shift/mask.  This is
+# a pure host-side numpy helper AND has a jnp twin in mul.py for on-device
+# conversion (the paper's "radix conversion" phase, Table 1/3).
+# ---------------------------------------------------------------------------
+
+def repack_np(arr: np.ndarray, from_bits: int, to_bits: int) -> np.ndarray:
+    """Repack little-endian digit arrays between radices (numpy, batched).
+
+    arr: (..., m_from) unsigned array with digits < 2**from_bits.
+    Returns (..., m_to) uint64-safe array with digits < 2**to_bits.
+    """
+    arr = np.asarray(arr, dtype=np.uint64)
+    m_from = arr.shape[-1]
+    total_bits = from_bits * m_from
+    m_to = -(-total_bits // to_bits)
+    out = np.zeros(arr.shape[:-1] + (m_to,), dtype=np.uint64)
+    mask = np.uint64((1 << to_bits) - 1)
+    for j in range(m_to):
+        lo_bit = to_bits * j
+        src = lo_bit // from_bits
+        off = lo_bit - src * from_bits
+        val = arr[..., src] >> np.uint64(off)
+        bits_have = from_bits - off
+        k = 1
+        while bits_have < to_bits and src + k < m_from:
+            val = val | (arr[..., src + k] << np.uint64(bits_have))
+            bits_have += from_bits
+            k += 1
+        out[..., j] = val & mask
+    return out
+
+
+def digits16_from_limbs32(limbs: np.ndarray) -> np.ndarray:
+    """Fast path for the 32 -> 16 split (each limb -> lo16, hi16)."""
+    limbs = np.asarray(limbs, dtype=np.uint32)
+    lo = limbs & np.uint32(0xFFFF)
+    hi = limbs >> np.uint32(16)
+    return np.stack([lo, hi], axis=-1).reshape(*limbs.shape[:-1], -1)
+
+
+def limbs32_from_digits16(digits: np.ndarray) -> np.ndarray:
+    """Inverse of digits16_from_limbs32 (digits must be normalized < 2**16)."""
+    digits = np.asarray(digits, dtype=np.uint32)
+    if digits.shape[-1] % 2:
+        digits = np.concatenate(
+            [digits, np.zeros(digits.shape[:-1] + (1,), np.uint32)], axis=-1)
+    pairs = digits.reshape(*digits.shape[:-1], -1, 2)
+    return pairs[..., 0] | (pairs[..., 1] << np.uint32(16))

@@ -1,0 +1,193 @@
+"""Batched Montgomery modular arithmetic over radix-2**16 digits.
+
+The crypto-serving substrate (paper sec 4.4/4.5: DoTSSL): RSA / DH / DSA
+reduce to modular exponentiation, which reduces to Montgomery multiply.
+On TPU the SIMD win is the batch axis -- thousands of independent modexps
+vectorized over VPU lanes -- while each CIOS iteration uses the same
+deferred-carry structure as DoT (lazy uint32 digits, one carry-resolve
+pass at the end) instead of per-step carry propagation.
+
+Lazy-digit overflow analysis (why no per-iteration normalization):
+  each CIOS iteration adds <= 4*(B-1) + carry < 5*2**16 to any digit, so
+  after m iterations digits < 5*m*2**16 -- safe in uint32 for m <= 2**13
+  (operands up to 128 Kbit, far beyond RSA sizes).
+
+Exponentiation is constant-time square-and-multiply (both branches
+computed, select by bit) -- matching how crypto libraries avoid key-
+dependent timing.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import limbs as L
+from repro.core.mul import normalize_digits, normalize_digits_scan
+
+U32 = jnp.uint32
+DIGIT_BITS = 16
+BASE = 1 << DIGIT_BITS
+MASK = jnp.uint32(BASE - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class MontCtx:
+    """Host-side Montgomery context for an odd modulus n (R = B**m)."""
+    m: int                       # digits
+    n: int                       # python int modulus
+    n0p: int                     # -n^{-1} mod B
+    n_digits: np.ndarray         # (m,)
+    r2_digits: np.ndarray        # R^2 mod n   (to enter Montgomery form)
+    one_digits: np.ndarray       # R mod n     (Montgomery form of 1)
+
+
+def mont_setup(n: int, nbits: int | None = None) -> MontCtx:
+    assert n % 2 == 1 and n > 2, "Montgomery requires an odd modulus"
+    nbits = nbits or n.bit_length()
+    m = -(-nbits // DIGIT_BITS)
+    R = 1 << (DIGIT_BITS * m)
+    n0p = (-pow(n, -1, BASE)) % BASE
+    return MontCtx(
+        m=m, n=n, n0p=n0p,
+        n_digits=L.int_to_limbs(n, m, DIGIT_BITS),
+        r2_digits=L.int_to_limbs((R * R) % n, m, DIGIT_BITS),
+        one_digits=L.int_to_limbs(R % n, m, DIGIT_BITS),
+    )
+
+
+def _ge(a: jax.Array, b: jax.Array) -> jax.Array:
+    """a >= b on normalized digit arrays; returns (...,) bool."""
+    # lexicographic from the most significant digit
+    gt = a > b
+    lt = a < b
+    # highest index where digits differ decides
+    idx = jnp.arange(a.shape[-1])
+    diff = gt.astype(jnp.int32) - lt.astype(jnp.int32)
+    # weight by position: the most significant nonzero diff wins
+    def step(carry, x):
+        d = x
+        return jnp.where(d != 0, d, carry), None
+    d_t = jnp.moveaxis(diff, -1, 0)
+    out, _ = jax.lax.scan(step, jnp.zeros(a.shape[:-1], jnp.int32), d_t)
+    return out >= 0
+
+
+def _sub_mod(a: jax.Array, n_dig: jax.Array) -> jax.Array:
+    """a - n on digit arrays (a >= n guaranteed by caller), normalized."""
+    mask = MASK
+    comp = (mask - n_dig) & mask
+    t = a + comp
+    t = t.at[..., 0].add(1)
+    t = normalize_digits(t, DIGIT_BITS)
+    # drop the implicit B**m carry: it lands beyond the array only if a>=n;
+    # with equal lengths the carry out of the top digit vanishes mod B**m.
+    return t
+
+
+def mont_mul(a: jax.Array, b: jax.Array, ctx: MontCtx,
+             lazy: bool = True) -> jax.Array:
+    """CIOS Montgomery product: a*b*R^{-1} mod n.
+
+    a, b: (..., m) normalized digits < 2**16, values < n.
+    Sequential over the m digits of a (inherent to Montgomery); fully
+    vectorized over the batch and the m-digit vector ops per iteration;
+    digits stay lazy (deferred carries) across all iterations.
+
+    lazy=False normalizes the accumulator EVERY iteration (the carry-
+    chasing structure of non-DoT implementations); the benchmark harness
+    uses it as the integration baseline (paper sec 4.4).
+    """
+    m = ctx.m
+    n_dig = jnp.asarray(ctx.n_digits, U32)
+    n0p = jnp.uint32(ctx.n0p)
+    bits = jnp.uint32(DIGIT_BITS)
+
+    a = jnp.asarray(a, U32)
+    b = jnp.asarray(b, U32)
+    batch_shape = jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1])
+    acc0 = jnp.zeros(batch_shape + (m + 1,), U32)
+
+    a_t = jnp.moveaxis(jnp.broadcast_to(a, batch_shape + (m,)), -1, 0)
+
+    def step(acc, ai):
+        # acc += a_i * b   (lo into j, hi into j+1) -- lazy adds
+        prod = ai[..., None] * b                      # (..., m) exact u32
+        lo = prod & MASK
+        hi = prod >> bits
+        acc = acc.at[..., :m].add(lo)
+        acc = acc.at[..., 1:m + 1].add(hi)
+        # u = (acc[0] mod B) * n0p mod B ; acc += u * n
+        u = ((acc[..., 0] & MASK) * n0p) & MASK
+        prod2 = u[..., None] * n_dig
+        lo2 = prod2 & MASK
+        hi2 = prod2 >> bits
+        acc = acc.at[..., :m].add(lo2)
+        acc = acc.at[..., 1:m + 1].add(hi2)
+        # digit 0 is now 0 mod B; shift down one digit, carrying its high part
+        c0 = acc[..., 0] >> bits
+        acc = jnp.concatenate(
+            [acc[..., 1:], jnp.zeros(batch_shape + (1,), U32)], axis=-1)
+        acc = acc.at[..., 0].add(c0)
+        if not lazy:
+            # non-DoT baseline: resolve every carry immediately (sequential
+            # per-digit pass each iteration, like the ADC-chain structure)
+            acc = normalize_digits_scan(acc, DIGIT_BITS)
+        return acc, None
+
+    acc, _ = jax.lax.scan(step, acc0, a_t)
+    acc = normalize_digits(acc, DIGIT_BITS)           # (..., m+1), t < 2n
+    # conditional subtract: t >= n -> t - n
+    n_ext = jnp.concatenate([n_dig, jnp.zeros((1,), U32)])
+    ge = _ge(acc, jnp.broadcast_to(n_ext, acc.shape))
+    sub = _sub_mod(acc, n_ext)[..., : m + 1]
+    out = jnp.where(ge[..., None], sub, acc)
+    return out[..., :m]
+
+
+def to_mont(x: jax.Array, ctx: MontCtx) -> jax.Array:
+    return mont_mul(x, jnp.asarray(ctx.r2_digits, U32), ctx)
+
+
+def from_mont(x: jax.Array, ctx: MontCtx) -> jax.Array:
+    one = jnp.zeros((ctx.m,), U32).at[0].set(1)
+    return mont_mul(x, one, ctx)
+
+
+def mod_mul(a: jax.Array, b: jax.Array, ctx: MontCtx) -> jax.Array:
+    """Plain modular product (enters/leaves Montgomery form)."""
+    return from_mont(mont_mul(to_mont(a, ctx), to_mont(b, ctx), ctx), ctx)
+
+
+def mod_exp(base: jax.Array, exp_bits: jax.Array, ctx: MontCtx,
+            lazy: bool = True) -> jax.Array:
+    """base ** e mod n.
+
+    base: (..., m) digits; exp_bits: (nbits,) or (..., nbits) uint32/int32
+    bits MSB-first.  Constant-time ladder: square always, multiply always,
+    select by the exponent bit.
+    """
+    x = to_mont(jnp.asarray(base, U32), ctx)
+    one = jnp.asarray(ctx.one_digits, U32)
+    res0 = jnp.broadcast_to(one, x.shape).astype(U32)
+    eb = jnp.asarray(exp_bits, U32)
+    nbits = eb.shape[-1]
+    eb_t = jnp.moveaxis(jnp.broadcast_to(eb, x.shape[:-1] + (nbits,)), -1, 0)
+
+    def step(res, bit):
+        sq = mont_mul(res, res, ctx, lazy)
+        mul = mont_mul(sq, x, ctx, lazy)
+        return jnp.where((bit == 1)[..., None], mul, sq), None
+
+    res, _ = jax.lax.scan(step, res0, eb_t)
+    return from_mont(res, ctx)
+
+
+def exp_bits_msb(e: int, nbits: int | None = None) -> np.ndarray:
+    nbits = nbits or max(1, e.bit_length())
+    return np.array([(e >> (nbits - 1 - i)) & 1 for i in range(nbits)],
+                    np.uint32)

@@ -1,0 +1,138 @@
+"""pi to N decimal digits via Machin's formula on DoT fixed-point bignums.
+
+The GMPbench "pi" analogue (paper Fig. 4: +19.3% from faster add/sub/mul):
+  pi = 16 arctan(1/5) - 4 arctan(1/239)
+  arctan(1/x) = sum_k (-1)^k / ((2k+1) x^(2k+1))
+
+Fixed point: F = value * B**m for radix B = 2**16 and m digits.  Each term
+needs one division by a SMALL integer (x**2 <= 57121 and 2k+1), which is a
+digit-wise scan with a running remainder, plus one DoT add/sub per term --
+the workload is dominated by exactly the primitives the paper accelerates.
+All series state lives in JAX; only the final decimal rendering is host-
+side Python.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import limbs as L
+from repro.core.mul import normalize_digits
+
+U32 = jnp.uint32
+DIGIT_BITS = 16
+MASK = jnp.uint32(0xFFFF)
+
+
+def div_small(x: jax.Array, s) -> jax.Array:
+    """Exact floor-division of an m-digit fixed-point number by a small
+    positive int s < 2**16: scan from the most significant digit with a
+    running remainder (r*B + d < 2**32 stays exact in uint32)."""
+    s = jnp.uint32(s)
+
+    def step(r, d):
+        cur = (r << jnp.uint32(DIGIT_BITS)) | d
+        q = cur // s
+        return cur - q * s, q
+
+    x_t = jnp.moveaxis(x, -1, 0)[::-1]            # MSB first
+    _, q_t = jax.lax.scan(step, jnp.zeros(x.shape[:-1], U32), x_t)
+    return jnp.moveaxis(q_t[::-1], 0, -1)
+
+
+def _widen_add(a, b):
+    """Digit-domain (radix 2**16) add: lazy sum + deferred-carry resolve."""
+    return normalize_digits(a + b, DIGIT_BITS)
+
+
+def _widen_sub(a, b):
+    """Digit-domain subtract, a >= b: radix complement + carry resolve
+    (the mod-B**m carry drops off the top)."""
+    comp = (MASK - b) & MASK
+    t = (a + comp).at[..., 0].add(1)
+    return normalize_digits(t, DIGIT_BITS)
+
+
+def arctan_inv(x: int, m_digits: int) -> jax.Array:
+    """arctan(1/x) in fixed point with m 16-bit digits (value * B**m).
+
+    Iterates until the term underflows to zero (dynamic while_loop; each
+    iteration is one div_small + one DoT add/sub)."""
+    # t0 = B**m / x
+    fixed_one = jnp.zeros((m_digits + 1,), U32).at[m_digits].set(1)
+    t0 = div_small(fixed_one, x)[..., :m_digits]
+    x2 = jnp.uint32(x * x)
+
+    def cond(state):
+        t, total, k, sign = state
+        return jnp.any(t != 0)
+
+    def body(state):
+        t, total, k, sign = state
+        term = div_small(t, 2 * k + 1)
+        total = jnp.where(sign == 1,
+                          _widen_sub(total, term),
+                          _widen_add(total, term))
+        t = div_small(t, x2)
+        return t, total, k + 1, 1 - sign
+
+    # first term: + t0 / 1
+    total0 = t0
+    t1 = div_small(t0, x2)
+    state = (t1, total0, jnp.uint32(1), jnp.uint32(1))
+    _, total, _, _ = jax.lax.while_loop(cond, body, state)
+    return total
+
+
+def _mul_small(x: jax.Array, s: int) -> jax.Array:
+    """x * s for small s, WIDENED by one digit (holds the integer part)."""
+    from repro.core.mul import normalize_digits
+    prod = x * jnp.uint32(s)
+    lo = prod & MASK
+    hi = prod >> jnp.uint32(DIGIT_BITS)
+    zeros1 = jnp.zeros(x.shape[:-1] + (1,), U32)
+    out = jnp.concatenate([lo, zeros1], axis=-1)
+    out = out.at[..., 1:].add(hi)
+    return normalize_digits(out, DIGIT_BITS)
+
+
+def pi_digits(n_decimal: int, guard_digits: int = 4) -> str:
+    """Compute pi to n_decimal digits; returns "3.1415..." string."""
+    bits_needed = int(n_decimal * np.log2(10)) + 16 * guard_digits
+    m = -(-bits_needed // DIGIT_BITS)
+    a5 = arctan_inv(5, m)
+    a239 = arctan_inv(239, m)
+    pi_fx = _widen_sub(_mul_small(a5, 16), _mul_small(a239, 4))
+    # host-side decimal rendering
+    val = L.limbs_to_int(np.asarray(pi_fx), DIGIT_BITS)
+    scale = 1 << (DIGIT_BITS * m)
+    int_part = val // scale
+    frac = val - int_part * scale
+    digits = []
+    for _ in range(n_decimal):
+        frac *= 10
+        digits.append(str(frac // scale))
+        frac %= scale
+    return f"{int_part}." + "".join(digits)
+
+
+def pi_reference(n_decimal: int) -> str:
+    """Host-side Python-int oracle (same Machin formula, exact)."""
+    prec = n_decimal + 10
+    scale = 10 ** prec
+
+    def atan_inv(x):
+        total = 0
+        term = scale // x
+        k = 0
+        x2 = x * x
+        while term:
+            total += term // (2 * k + 1) if k % 2 == 0 else -(term // (2 * k + 1))
+            term //= x2
+            k += 1
+        return total
+
+    pi_val = 16 * atan_inv(5) - 4 * atan_inv(239)
+    s = str(pi_val)
+    return s[0] + "." + s[1:1 + n_decimal]

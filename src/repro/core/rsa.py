@@ -1,0 +1,125 @@
+"""RSA-style batched sign/verify on top of DoT modular arithmetic.
+
+The OpenSSL-speed analogue (paper Fig. 5): throughput/latency of modexp-
+bound crypto, batched across TPU lanes.  Key generation runs host-side
+with Python integers (Miller-Rabin) -- the launcher's job, like loading
+certificates; all per-message math runs in JAX via core.modular.
+
+This module also provides the checkpoint-integrity signer used by
+train/checkpoint.py (dogfooding: the framework's own fault-tolerance
+layer rides on the paper's arithmetic).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import limbs as L
+from repro.core import modular as M
+
+U32 = jnp.uint32
+DIGIT_BITS = 16
+
+
+# ---------------------------------------------------------------------------
+# host-side keygen (python ints)
+# ---------------------------------------------------------------------------
+
+_SMALL_PRIMES = [2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47]
+
+
+def _is_probable_prime(n: int, rng: np.random.Generator, rounds: int = 12) -> bool:
+    if n < 2:
+        return False
+    for p in _SMALL_PRIMES:
+        if n % p == 0:
+            return n == p
+    d, r = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        r += 1
+    for _ in range(rounds):
+        a = int(rng.integers(2, min(n - 2, 1 << 62)))
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(r - 1):
+            x = x * x % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def _gen_prime(bits: int, rng: np.random.Generator) -> int:
+    while True:
+        raw = L.random_bigints(rng, 1, bits)[0]
+        cand = raw | (1 << (bits - 1)) | 1
+        if _is_probable_prime(cand, rng):
+            return cand
+
+
+@dataclasses.dataclass(frozen=True)
+class RSAKey:
+    n: int
+    e: int
+    d: int
+    bits: int
+
+    @property
+    def ctx(self) -> M.MontCtx:
+        return M.mont_setup(self.n, self.bits)
+
+
+def generate_key(bits: int = 512, seed: int = 0, e: int = 65537) -> RSAKey:
+    rng = np.random.default_rng(seed)
+    while True:
+        p = _gen_prime(bits // 2, rng)
+        q = _gen_prime(bits - bits // 2, rng)
+        if p == q:
+            continue
+        n = p * q
+        phi = (p - 1) * (q - 1)
+        if np.gcd(e, 1) and phi % e != 0:
+            try:
+                d = pow(e, -1, phi)
+            except ValueError:
+                continue
+            return RSAKey(n=n, e=e, d=d, bits=bits)
+
+
+# ---------------------------------------------------------------------------
+# batched sign / verify (JAX)
+# ---------------------------------------------------------------------------
+
+def messages_to_digits(msgs: list[int], key: RSAKey) -> jnp.ndarray:
+    m_digits = key.ctx.m
+    return jnp.asarray(np.stack(
+        [L.int_to_limbs(msg % key.n, m_digits, DIGIT_BITS) for msg in msgs]))
+
+
+def sign(msg_digits: jax.Array, key: RSAKey) -> jax.Array:
+    """s = m^d mod n, batched over leading axes."""
+    bits = M.exp_bits_msb(key.d, key.n.bit_length())
+    return M.mod_exp(msg_digits, jnp.asarray(bits), key.ctx)
+
+
+def verify(sig_digits: jax.Array, key: RSAKey) -> jax.Array:
+    """m = s^e mod n (fast public exponent)."""
+    bits = M.exp_bits_msb(key.e)
+    return M.mod_exp(sig_digits, jnp.asarray(bits), key.ctx)
+
+
+def digest_int(data: bytes, bits: int) -> int:
+    h = b""
+    i = 0
+    while len(h) * 8 < bits:
+        h += hashlib.sha256(data + i.to_bytes(4, "big")).digest()
+        i += 1
+    return int.from_bytes(h, "big") % (1 << (bits - 1))

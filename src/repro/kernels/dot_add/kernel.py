@@ -1,0 +1,87 @@
+"""Pallas TPU kernel for DoT multi-limb addition/subtraction.
+
+Grid: 1-D over batch tiles; each program owns a (TB, m) block of both
+operands in VMEM.  The limb axis (m uint32 limbs, little-endian) maps to
+VPU lanes; the batch tile maps to sublanes -- the TPU twin of issuing one
+AVX-512 instruction across 8 lanes, amortized over thousands of
+independent additions.
+
+In-kernel schedule (branch-free; see core/add.py for the lax.cond "rare
+slow path" formulation -- inside a kernel the log-depth unconditional
+Phase 4 is cheaper than divergence):
+  P1  r = a + b                       (one VPU add)
+  P2  g = r < a ; p = r == MAX        (carry generate / propagate masks)
+  P4' unrolled Kogge-Stone over the limb axis (log2(m) shift/or rounds)
+  P3  s = r + shift_up(G)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+U32 = jnp.uint32
+MAX32 = np.uint32(0xFFFFFFFF)
+
+
+def ks_scan_unrolled(g, p):
+    """Inclusive (generate, propagate) prefix scan along the last axis,
+    unrolled into log2(m) shift rounds (identity element: g=0, p=1)."""
+    m = g.shape[-1]
+    d = 1
+    while d < m:
+        g_sh = jnp.concatenate(
+            [jnp.zeros_like(g[..., :d]), g[..., :-d]], axis=-1)
+        p_sh = jnp.concatenate(
+            [jnp.ones_like(p[..., :d]), p[..., :-d]], axis=-1)
+        g = g | (p & g_sh)
+        p = p & p_sh
+        d *= 2
+    return g, p
+
+
+def shift_up(c):
+    return jnp.concatenate(
+        [jnp.zeros_like(c[..., :1]), c[..., :-1]], axis=-1)
+
+
+def add_kernel(a_ref, b_ref, s_ref, c_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    r = a + b                                   # P1
+    g = (r < a).astype(U32)                     # P2
+    p = (r == MAX32).astype(U32)
+    G, _ = ks_scan_unrolled(g, p)               # P4' (branch-free)
+    s_ref[...] = r + shift_up(G)                # P3
+    c_ref[...] = G[..., -1:]
+
+
+def sub_kernel(a_ref, b_ref, s_ref, c_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    r = a - b
+    g = (a < b).astype(U32)                     # borrow generate
+    p = (r == np.uint32(0)).astype(U32)        # borrow propagate
+    G, _ = ks_scan_unrolled(g, p)
+    s_ref[...] = r - shift_up(G)
+    c_ref[...] = G[..., -1:]
+
+
+def make_call(kernel, batch_tile: int, m: int, grid: int,
+              interpret: bool):
+    return pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((batch_tile, m), lambda i: (i, 0)),
+                  pl.BlockSpec((batch_tile, m), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((batch_tile, m), lambda i: (i, 0)),
+                   pl.BlockSpec((batch_tile, 1), lambda i: (i, 0))],
+        out_shape=[
+            jax.ShapeDtypeStruct((grid * batch_tile, m), U32),
+            jax.ShapeDtypeStruct((grid * batch_tile, 1), U32),
+        ],
+        interpret=interpret,
+    )

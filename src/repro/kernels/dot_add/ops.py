@@ -1,0 +1,56 @@
+"""Jit'd wrappers for the DoT add/sub Pallas kernels.
+
+Interpret mode is selected automatically on CPU (the kernel body runs as
+Python/jnp for correctness validation); on TPU the same BlockSpecs tile
+VMEM.  Batch is padded to the tile size and trimmed after the call.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dot_add import kernel as K
+
+U32 = jnp.uint32
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def _tile_for(m: int, batch: int) -> int:
+    # keep the (a, b, s, + temps) working set well under VMEM (~16 MB):
+    # ~6 live (TB, m) u32 arrays -> TB*m <= 64k words  (~1.5 MB).
+    tb = max(8, min(512, (64 * 1024) // max(8, m)))
+    return min(tb, max(8, batch))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "op"))
+def _call(a, b, interpret: bool, op: str):
+    batch, m = a.shape
+    tb = _tile_for(m, batch)
+    pad = (-batch) % tb
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+    grid = a.shape[0] // tb
+    kern = K.add_kernel if op == "add" else K.sub_kernel
+    s, c = K.make_call(kern, tb, m, grid, interpret)(a, b)
+    return s[:batch], c[:batch, 0]
+
+
+def dot_add(a, b, interpret=None):
+    """(batch, m) uint32 x2 -> ((batch, m) sum, (batch,) carry_out)."""
+    a = jnp.asarray(a, U32)
+    b = jnp.asarray(b, U32)
+    return _call(a, b, _auto_interpret(interpret), "add")
+
+
+def dot_sub(a, b, interpret=None):
+    a = jnp.asarray(a, U32)
+    b = jnp.asarray(b, U32)
+    return _call(a, b, _auto_interpret(interpret), "sub")

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the DoT addition kernel.
+
+The kernel computes batched multi-limb addition with a full carry resolve:
+semantically identical to core.add.dot_add_unconditional (phases 1-3 plus
+the branch-free Kogge-Stone Phase 4), which is itself oracle-tested against
+Python integers in tests/test_add.py.
+"""
+from repro.core.add import dot_add_unconditional, dot_sub_unconditional
+
+
+def dot_add_ref(a, b):
+    """(batch, m) uint32 x2 -> ((batch, m) sum, (batch,) carry_out)."""
+    return dot_add_unconditional(a, b)
+
+
+def dot_sub_ref(a, b):
+    return dot_sub_unconditional(a, b)

@@ -1,0 +1,54 @@
+"""Jit'd wrapper for the DoT base-case multiplication kernel.
+
+Accepts either 16-bit digit arrays (native) or 32-bit limb arrays (the
+GMP/OpenSSL-facing saturated radix; converted at entry/exit like the
+paper's 4x4 routine pays for 64<->52 packing).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mul as coremul
+from repro.kernels.dot_mul import kernel as K
+
+U32 = jnp.uint32
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _call(a, b, interpret: bool):
+    batch, m = a.shape
+    tb = max(8, min(256, (16 * 1024) // max(8, m)))
+    tb = min(tb, max(8, batch))
+    pad = (-batch) % tb
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+    grid = a.shape[0] // tb
+    p = K.make_call(tb, m, grid, interpret)(a, b)
+    return p[:batch]
+
+
+def dot_mul_digits(a_digits, b_digits, interpret=None):
+    """(batch, m) uint32 radix-2**16 digits -> (batch, 2m) digits."""
+    a = jnp.asarray(a_digits, U32)
+    b = jnp.asarray(b_digits, U32)
+    return _call(a, b, _auto_interpret(interpret))
+
+
+def dot_mul_limbs32(a_limbs, b_limbs, interpret=None):
+    """(batch, m) uint32 saturated limbs -> (batch, 2m) limbs (full product),
+    with radix conversion at entry/exit (paper sec 3.3, 4x4 routine)."""
+    m = a_limbs.shape[-1]
+    a_d = coremul.split_digits(jnp.asarray(a_limbs, U32), 16)
+    b_d = coremul.split_digits(jnp.asarray(b_limbs, U32), 16)
+    p_d = dot_mul_digits(a_d, b_d, interpret)
+    return coremul.join_digits(p_d, 16, 2 * m)

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for the DoT multiplication kernel: core.mul.dot_mul
+(itself oracle-tested against Python-int products in tests/test_mul.py)."""
+from repro.core.mul import dot_mul, mul_limbs32
+
+
+def dot_mul_digits_ref(a_digits, b_digits):
+    return dot_mul(a_digits, b_digits)
+
+
+def dot_mul_limbs32_ref(a_limbs, b_limbs):
+    return mul_limbs32(a_limbs, b_limbs, method="dot")

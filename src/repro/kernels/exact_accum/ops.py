@@ -1,0 +1,75 @@
+"""Jit'd wrappers for the exact-accumulation kernels.
+
+Arrays of any shape are flattened to (batch, n) tiles; digit planes are
+(L, ...) leading-axis so cross-replica psum reduces contiguous planes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.exact_accum import DEFAULT, ExactAccumConfig
+from repro.kernels.exact_accum import kernel as K
+
+U32 = jnp.uint32
+_N = 256   # lane tile
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def _as2d(x):
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % _N
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(-1, _N), pad
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "interpret"))
+def encode(x, cfg: ExactAccumConfig = DEFAULT, interpret=None):
+    """f32 (...) -> uint32 (L, ceil(size/N), N) digit planes."""
+    interpret = _auto_interpret(interpret)
+    x2, _ = _as2d(x)
+    b, n = x2.shape
+    tb = min(64, b)
+    padb = (-b) % tb
+    if padb:
+        x2 = jnp.pad(x2, ((0, padb), (0, 0)))
+    grid = x2.shape[0] // tb
+    return K.make_encode(cfg, tb, n, grid, interpret)(x2)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def accumulate(acc, digits, interpret=None):
+    """acc += digits (deferred-carry; acc donated/aliased)."""
+    interpret = _auto_interpret(interpret)
+    L, b, n = acc.shape
+    tb = min(64, b)
+    grid = b // tb if b % tb == 0 else None
+    if grid is None:
+        return acc + digits          # ragged fallback
+    return K.make_accum(L, tb, n, grid, interpret)(acc, digits)
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "shape", "interpret"))
+def finalize(acc, cfg: ExactAccumConfig = DEFAULT, shape=None, interpret=None):
+    """digit planes -> f32, carries resolved; optionally reshaped."""
+    interpret = _auto_interpret(interpret)
+    L, b, n = acc.shape
+    tb = min(64, b)
+    padb = (-b) % tb
+    if padb:
+        acc = jnp.pad(acc, ((0, 0), (0, padb), (0, 0)))
+    grid = acc.shape[1] // tb
+    y = K.make_finalize(cfg, tb, n, grid, interpret)(acc)[:b]
+    flat = y.reshape(-1)
+    if shape is not None:
+        flat = flat[: int(np.prod(shape))].reshape(shape)
+    return flat

@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the exact-accumulation kernels (core.exact_accum)."""
+import jax.numpy as jnp
+
+from repro.core import exact_accum as EA
+
+
+def encode_ref(x, cfg=EA.DEFAULT, n=256):
+    """Matches ops.encode layout: (L, ceil(size/n), n)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    d = EA.encode(flat.reshape(-1, n), cfg)        # (B, n, L)
+    return jnp.moveaxis(d, -1, 0)                   # (L, B, n)
+
+
+def finalize_ref(acc, cfg=EA.DEFAULT, shape=None):
+    import numpy as np
+    norm = EA.normalize(jnp.moveaxis(acc, 0, -1), cfg)
+    y = EA.decode(norm, cfg).reshape(-1)
+    if shape is not None:
+        y = y[: int(np.prod(shape))].reshape(shape)
+    return y

@@ -1,0 +1,59 @@
+"""Parse collective-communication bytes out of compiled HLO text.
+
+``compiled.cost_analysis()`` does not expose collective traffic, so the
+roofline's collective term comes from summing the result-shape bytes of
+every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute in the post-SPMD module (async -start forms counted
+once; -done forms skipped).  Ops inside while-loop (scan) bodies appear
+once in the text; launch/roofline.py re-multiplies them via the
+segment-delta correction.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"=\s*(\([^=]*?\)|[a-z0-9]+\[[^\]]*\](?:\{[^}]*\})?)\s+([a-z0-9-]+)\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result bytes per collective opcode.  Returns {opcode: bytes,
+    'total': bytes}."""
+    out = defaultdict(float)
+    for m in _INSTR_RE.finditer(hlo_text):
+        shape_str, opcode = m.group(1), m.group(2)
+        if opcode.endswith("-done"):
+            continue
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if base not in COLLECTIVES:
+            continue
+        out[base] += _shape_bytes(shape_str)
+    out["total"] = sum(v for k, v in out.items())
+    return dict(out)

@@ -1,0 +1,154 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+Three terms per (arch x shape), single-pod mesh (256 chips):
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOPs          (197 TF/s bf16)
+  memory     = HLO_bytes_per_chip / HBM_bw              (819 GB/s)
+  collective = collective_bytes_per_chip / link_bw      (50 GB/s/link)
+
+``cost_analysis()`` and the HLO collective parse are per-chip post-SPMD
+numbers, but count every ``lax.scan`` (while-loop) body ONCE.  The
+dry-run therefore compiles each cell twice -- default segmentation and
+one extra scan over the same layers -- and the cost delta isolates one
+scan-body's contribution:
+
+  true = C(base) + (num_layers - num_scans_base) * (C(split) - C(base))
+
+Also reported: MODEL_FLOPS = 6*N_active*D (train) / 2*N_active*D (serve),
+and the usefulness ratio MODEL_FLOPS / HLO_FLOPS (remat/redundancy waste
+shows up here: full remat targets ~0.75, i.e., 4/3 recompute overhead).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
+
+CHIPS_SINGLE_POD = 256
+
+
+def _load(out_dir: pathlib.Path, arch, shape, mesh, variant) -> Optional[dict]:
+    p = out_dir / f"{arch}.{shape}.{mesh}.{variant}.json"
+    if not p.exists():
+        return None
+    rec = json.loads(p.read_text())
+    return rec if rec.get("ok") else None
+
+
+def corrected_cell(out_dir: pathlib.Path, arch: str, shape: str,
+                   mesh: str = "single") -> Optional[dict]:
+    """Scan-corrected per-chip flops / bytes / collective bytes + terms."""
+    base = _load(out_dir, arch, shape, mesh, "base")
+    if base is None:
+        return None
+    flops = base["cost"]["flops"]
+    bytes_ = base["cost"]["bytes_accessed"]
+    coll = base["collectives"].get("total", 0.0)
+
+    scan_info = base["scan_info"]
+    variants = (["split"] if len(scan_info) == 1
+                else ["split_enc", "split_dec"])
+    names = list(scan_info)
+    for vname, sname in zip(variants, names):
+        split = _load(out_dir, arch, shape, mesh, vname)
+        units, segments = scan_info[sname]
+        n_scans = len(segments)
+        extra = units - n_scans
+        if split is None or extra <= 0:
+            continue
+        d_f = max(0.0, split["cost"]["flops"] - flops)
+        d_b = max(0.0, split["cost"]["bytes_accessed"] - bytes_)
+        d_c = max(0.0, split["collectives"].get("total", 0.0) - coll)
+        flops += extra * d_f
+        bytes_ += extra * d_b
+        coll += extra * d_c
+
+    t_compute = flops / PEAK_FLOPS_BF16
+    t_memory = bytes_ / HBM_BW
+    t_coll = coll / ICI_BW_PER_LINK
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    hlo_total = flops * CHIPS_SINGLE_POD
+    model = base["model_flops"]
+    mem = base["memory"]
+    return {
+        "arch": arch, "shape": shape,
+        "flops_per_chip": flops, "bytes_per_chip": bytes_,
+        "coll_bytes_per_chip": coll,
+        "t_compute": t_compute, "t_memory": t_memory, "t_collective": t_coll,
+        "dominant": dominant,
+        "model_flops": model,
+        "useful_ratio": model / hlo_total if hlo_total else 0.0,
+        "roofline_fraction": t_compute / max(max(terms.values()), 1e-30),
+        "hbm_args_gb": mem["argument_bytes"] / 2 ** 30,
+        "hbm_temp_gb": mem["temp_bytes"] / 2 ** 30,
+        "params": base["params"],
+        "active_params": base["active_params"],
+    }
+
+
+def suggestion(cell: dict) -> str:
+    d = cell["dominant"]
+    if d == "collective":
+        return ("cut collective bytes: bf16/int8 weight gathers, "
+                "reduce-scatter grads, larger per-step compute per gather")
+    if d == "memory":
+        return ("raise arithmetic intensity: fuse attention (flash), "
+                "bf16 caches, larger batch per chip")
+    if cell["useful_ratio"] < 0.6:
+        return ("compute-bound but wasteful: reduce remat recompute / "
+                "causal-mask dead FLOPs / padded heads")
+    return "compute-bound near roofline: tune block shapes / overlap tails"
+
+
+def table(out_dir, mesh="single") -> str:
+    out_dir = pathlib.Path(out_dir)
+    cells = []
+    seen = set()
+    for p in sorted(out_dir.glob(f"*.{mesh}.base.json")):
+        arch, shape = p.name.split(".")[:2]
+        if (arch, shape) in seen:
+            continue
+        seen.add((arch, shape))
+        c = corrected_cell(out_dir, arch, shape, mesh)
+        if c:
+            cells.append(c)
+
+    hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
+           "| MODEL/HLO | roofline frac | HBM args GB | HBM temp GB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for c in sorted(cells, key=lambda c: (c["arch"], c["shape"])):
+        rows.append(
+            f"| {c['arch']} | {c['shape']} | {c['t_compute']:.3e} | "
+            f"{c['t_memory']:.3e} | {c['t_collective']:.3e} | "
+            f"**{c['dominant']}** | {c['useful_ratio']:.2f} | "
+            f"{c['roofline_fraction']:.2f} | {c['hbm_args_gb']:.2f} | "
+            f"{c['hbm_temp_gb']:.1f} |")
+    return hdr + "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+    if args.json:
+        out_dir = pathlib.Path(args.dir)
+        cells = {}
+        for p in sorted(out_dir.glob(f"*.{args.mesh}.base.json")):
+            arch, shape = p.name.split(".")[:2]
+            c = corrected_cell(out_dir, arch, shape, args.mesh)
+            if c:
+                cells[f"{arch}.{shape}"] = c
+        print(json.dumps(cells, indent=1))
+    else:
+        print(table(args.dir, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.models.config import (
+    SHAPES,
+    SHAPES_BY_NAME,
+    ModelConfig,
+    ShapeConfig,
+    applicable_shapes,
+)
+from repro.models.model import build_model

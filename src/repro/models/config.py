@@ -1,0 +1,144 @@
+"""Model configuration for all assigned architectures.
+
+One dataclass covers the ten assigned families (dense / MoE / MLA / hybrid /
+SSM / VLM / audio enc-dec); family-specific fields are ignored elsewhere.
+Each src/repro/configs/<arch>.py instantiates this with the exact published
+numbers and a reduced twin for CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | mla | hybrid | ssm | vlm | audio
+    num_layers: int
+    d_model: int
+    vocab_size: int
+    d_ff: int
+    # attention
+    num_heads: int = 0
+    num_kv_heads: int = 0
+    head_dim: int = 0
+    rope_theta: float = 10_000.0
+    attn_pattern: str = "global"     # "global" | "local_global" (gemma2)
+    local_window: int = 4096
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    post_norms: bool = False         # gemma2-style post-block norms
+    # mlp
+    mlp_act: str = "silu"            # silu | gelu
+    # moe
+    num_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # mla (minicpm3 / deepseek style)
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_nope_dim: int = 0
+    qk_rope_dim: int = 0
+    v_head_dim: int = 0
+    # ssm (mamba2)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 128
+    # rwkv6
+    rwkv_head_dim: int = 64
+    rwkv_chunk: int = 32
+    # hybrid (zamba2): shared attention block every k mamba layers
+    shared_attn_every: int = 0
+    # enc-dec (seamless)
+    enc_layers: int = 0
+    dec_layers: int = 0
+    enc_frames_ratio: int = 4        # encoder frames = seq_len // ratio
+    # vlm
+    num_image_tokens: int = 0
+    # numerics / embedding
+    dtype: str = "bfloat16"          # activation/compute dtype
+    param_dtype: str = "float32"
+    tie_embeddings: bool = True
+    norm_eps: float = 1e-6
+    embed_scale: bool = False        # gemma-style sqrt(d) embedding scaling
+    # sharding/infra knobs
+    pad_heads_to: int = 0            # pad q heads for TP divisibility (llava)
+    remat: str = "none"              # none | full | dots
+    q_chunk: int = 4096              # unrolled flash-style query chunking
+    # roofline bookkeeping
+    sub_quadratic: bool = False      # True -> long_500k cell applies
+
+    @property
+    def cdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    @property
+    def padded_vocab(self) -> int:
+        return -(-self.vocab_size // 128) * 128
+
+    @property
+    def q_heads(self) -> int:
+        """Q heads after optional TP padding."""
+        return self.pad_heads_to or self.num_heads
+
+    @property
+    def kv_groups(self) -> int:
+        return max(1, self.q_heads // max(1, self.num_kv_heads))
+
+    @property
+    def ssm_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.ssm_inner // self.ssm_head_dim
+
+    @property
+    def rwkv_heads(self) -> int:
+        return self.d_model // self.rwkv_head_dim
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    """One input-shape cell (assigned per architecture)."""
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                        # train | prefill | decode
+
+    @property
+    def is_train(self) -> bool:
+        return self.kind == "train"
+
+
+SHAPES: Tuple[ShapeConfig, ...] = (
+    ShapeConfig("train_4k", 4_096, 256, "train"),
+    ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    ShapeConfig("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+def applicable_shapes(cfg: ModelConfig):
+    """long_500k only applies to sub-quadratic archs (SSM/hybrid/linear-attn);
+    pure full-attention archs skip it (recorded in DESIGN.md)."""
+    out = []
+    for s in SHAPES:
+        if s.name == "long_500k" and not cfg.sub_quadratic:
+            continue
+        out.append(s)
+    return tuple(out)

@@ -1,0 +1,736 @@
+"""Full-model assembly for every assigned architecture family.
+
+Layer stacks run under ``lax.scan`` over stacked per-layer params, split
+into ``segments`` (a tuple of scan lengths).  The dry-run lowers each cell
+with the default segmentation and once more with one extra segment (same
+total layers): the cost delta isolates one scan-body cost, which the
+roofline multiplies back by the true layer count (see launch/roofline.py).
+
+Families:
+  DecoderModel : dense | moe | mla | vlm   (+ gemma2 local/global pairs)
+  RWKVModel    : rwkv6 (attention-free)
+  HybridModel  : zamba2 (mamba2 backbone + shared attention block)
+  EncDecModel  : seamless (audio encoder stub -> text decoder)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed import sharding as dsh
+from repro.models import layers as Lyr
+from repro.models import ssm as S
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.models.layers import Init
+
+F32 = jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _stack_init(key, n: int, fn: Callable):
+    """vmap a per-layer init over n keys -> stacked (n, ...) params."""
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: fn(Init(k)))(keys)
+
+
+def layer_scan(body, carry, stacked, segments, remat: str = "none"):
+    """Scan `body` over stacked per-layer inputs, split into segments.
+
+    body: (carry, per_layer) -> (carry, per_layer_out)
+    Returns (carry, stacked_outputs or None).
+    """
+    if remat == "full":
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    elif remat == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    outs = []
+    start = 0
+    for seg in segments:
+        xs = jax.tree.map(lambda a: a[start:start + seg], stacked)
+        carry, ys = jax.lax.scan(body, carry, xs)
+        outs.append(ys)
+        start += seg
+    if outs and outs[0] is not None:
+        ys = jax.tree.map(lambda *zs: jnp.concatenate(zs, 0), *outs)
+    else:
+        ys = None
+    return carry, ys
+
+
+def _positions(B, S, offset=0):
+    return jnp.broadcast_to(
+        jnp.arange(S, dtype=jnp.int32)[None], (B, S)) + offset
+
+
+def gather_outer(params):
+    """Explicit FSDP all-gather for non-scanned params (embed, head, norms,
+    shared blocks); scanned layer params gather inside their scan body."""
+    scanned = ("layers", "enc_layers", "dec_layers")
+    sub = {k: v for k, v in params.items() if k not in scanned}
+    sub = dsh.gather_params(sub)
+    return {**params, **sub}
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    x = params["embed"][tokens].astype(cfg.cdtype)
+    if cfg.embed_scale:
+        x = x * float(np.sqrt(cfg.d_model))   # python float: weak-typed
+    return x
+
+
+def unembed(params, x, cfg: ModelConfig):
+    dt = cfg.cdtype
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(dt))
+    else:
+        logits = x @ params["lm_head"].astype(dt)
+    # vocab-sharded logits: the CE reductions all-reduce over "model",
+    # instead of materializing (B, S, V) replicated.
+    logits = dsh.constrain(logits, "dp", None, "model")
+    logits = Lyr.softcap(logits.astype(F32), cfg.final_softcap)
+    logits = dsh.constrain(logits, "dp", None, "model")
+    vp = cfg.padded_vocab
+    if vp != cfg.vocab_size:  # mask padded vocab columns
+        col = jnp.arange(vp)
+        logits = jnp.where(col[None, None, :] < cfg.vocab_size, logits, -1e30)
+    return logits
+
+
+def ce_loss(logits, targets, mask=None):
+    """logits (B,S,V) f32; targets (B,S) int32; mask (B,S) or None."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    z_loss = 1e-4 * jnp.square(lse)
+    per_tok = nll + z_loss
+    if mask is None:
+        return per_tok.mean(), {"nll": nll.mean()}
+    denom = jnp.clip(mask.sum(), 1.0)
+    return (per_tok * mask).sum() / denom, {
+        "nll": (nll * mask).sum() / denom}
+
+
+def _norm(p, x, eps):
+    return Lyr.rmsnorm(x, p, eps)
+
+
+# ---------------------------------------------------------------------------
+# Decoder-only model (dense / moe / mla / vlm / gemma2-pattern)
+# ---------------------------------------------------------------------------
+
+class DecoderModel:
+    """Generic decoder LM.  Unit = one layer, or one (local, global) pair
+    for gemma2's alternating pattern."""
+
+    def __init__(self, cfg: ModelConfig, segments: Optional[Tuple[int, ...]] = None):
+        self.cfg = cfg
+        self.pair = cfg.attn_pattern == "local_global"
+        assert cfg.num_layers % (2 if self.pair else 1) == 0
+        self.units = cfg.num_layers // (2 if self.pair else 1)
+        self.segments = tuple(segments) if segments else (self.units,)
+        assert sum(self.segments) == self.units
+
+    # -- params ------------------------------------------------------------
+    def _init_sublayer(self, ini: Init, kind: str):
+        cfg = self.cfg
+        p = {"ln1": ini.ones((cfg.d_model,), cfg.pdtype),
+             "ln2": ini.ones((cfg.d_model,), cfg.pdtype)}
+        if cfg.post_norms:
+            p["ln1p"] = ini.ones((cfg.d_model,), cfg.pdtype)
+            p["ln2p"] = ini.ones((cfg.d_model,), cfg.pdtype)
+        if cfg.family == "mla":
+            p["attn"] = Lyr.init_mla(ini, cfg)
+        else:
+            p["attn"] = Lyr.init_attn(ini, cfg)
+        if cfg.family == "moe":
+            p["moe"] = Lyr.init_moe(ini, cfg)
+        else:
+            p["mlp"] = Lyr.init_mlp(ini, cfg)
+        return p
+
+    def _init_unit(self, ini: Init):
+        if self.pair:
+            return {"local": self._init_sublayer(ini, "local"),
+                    "global": self._init_sublayer(ini, "global")}
+        return self._init_sublayer(ini, "global")
+
+    def init(self, key):
+        cfg = self.cfg
+        ini = Init(key)
+        params = {
+            "embed": ini.dense((cfg.padded_vocab, cfg.d_model), cfg.pdtype),
+            "final_norm": ini.ones((cfg.d_model,), cfg.pdtype),
+            "layers": _stack_init(ini.take(), self.units, self._init_unit),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = ini.dense(
+                (cfg.d_model, cfg.padded_vocab), cfg.pdtype)
+        return params
+
+    # -- one sublayer ------------------------------------------------------
+    def _sublayer(self, p, x, positions, *, window, cache, index):
+        cfg = self.cfg
+        h = _norm(p["ln1"], x, cfg.norm_eps)
+        if cfg.family == "mla":
+            a, new_cache = Lyr.mla_attention(
+                p["attn"], h, positions, cfg, cache=cache, cache_index=index)
+        else:
+            a, new_cache = Lyr.attention(
+                p["attn"], h, positions, cfg, window=window,
+                cache=cache, cache_index=index)
+        if cfg.post_norms:
+            a = _norm(p["ln1p"], a, cfg.norm_eps)
+        x = x + a
+        h = _norm(p["ln2"], x, cfg.norm_eps)
+        aux = jnp.zeros((), F32)
+        if cfg.family == "moe":
+            f, aux = Lyr.moe_ffn(p["moe"], h, cfg)
+        else:
+            f = Lyr.mlp(p["mlp"], h, cfg)
+        if cfg.post_norms:
+            f = _norm(p["ln2p"], f, cfg.norm_eps)
+        return x + f, new_cache, aux
+
+    def _unit(self, p, x, positions, cache, index):
+        cfg = self.cfg
+        if self.pair:
+            x, c_l, a1 = self._sublayer(
+                p["local"], x, positions, window=cfg.local_window,
+                cache=None if cache is None else cache["local"], index=index)
+            x, c_g, a2 = self._sublayer(
+                p["global"], x, positions, window=None,
+                cache=None if cache is None else cache["global"], index=index)
+            new_cache = None if c_l is None and c_g is None else \
+                {"local": c_l, "global": c_g}
+            return x, new_cache, a1 + a2
+        return self._sublayer(p, x, positions, window=None,
+                              cache=cache, index=index)
+
+    # -- forward -----------------------------------------------------------
+    def _assemble_inputs(self, params, batch):
+        """token (+image) embedding -> (x, positions)."""
+        cfg = self.cfg
+        x = embed_tokens(params, batch["tokens"], cfg)
+        if cfg.family == "vlm":
+            img = batch["image_embeds"].astype(cfg.cdtype)
+            x = jnp.concatenate([img, x], axis=1)
+        B, S, _ = x.shape
+        return x, _positions(B, S)
+
+    def _stack(self, params, x, positions, caches, index):
+        cfg = self.cfg
+
+        def body(carry, per_layer):
+            x, aux = carry
+            if caches is None:
+                p = per_layer
+                cache = None
+            else:
+                p, cache = per_layer
+            p = dsh.gather_params(p)
+            x, new_cache, a = self._unit(p, x, positions, cache, index)
+            return (x, aux + a), new_cache
+
+        stacked = params["layers"] if caches is None else (params["layers"], caches)
+        (x, aux), new_caches = layer_scan(
+            body, (x, jnp.zeros((), F32)), stacked, self.segments, cfg.remat)
+        return _norm(params["final_norm"], x, cfg.norm_eps), new_caches, aux
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        params = gather_outer(params)
+        x, positions = self._assemble_inputs(params, batch)
+        x, _, aux = self._stack(params, x, positions, None, None)
+        logits = unembed(params, x, cfg)
+        loss, metrics = ce_loss(logits, batch["targets"], batch.get("loss_mask"))
+        loss = loss + 0.01 * aux
+        metrics["aux"] = aux
+        return loss, metrics
+
+    def prefill(self, params, batch, cache):
+        cfg = self.cfg
+        params = gather_outer(params)
+        x, positions = self._assemble_inputs(params, batch)
+        x, caches, _ = self._stack(params, x, positions, cache, None)
+        logits = unembed(params, x[:, -1:], cfg)
+        return logits[:, 0], caches
+
+    def decode_step(self, params, cache, tokens, index):
+        cfg = self.cfg
+        params = gather_outer(params)
+        x = embed_tokens(params, tokens, cfg)
+        positions = jnp.broadcast_to(index, (x.shape[0], 1)).astype(jnp.int32)
+        x, caches, _ = self._stack(params, x, positions, cache, index)
+        logits = unembed(params, x, cfg)
+        return logits[:, 0], caches
+
+    # -- specs ---------------------------------------------------------------
+    def _attn_cache_spec(self, B, S):
+        cfg = self.cfg
+        if cfg.family == "mla":
+            return {
+                "ckv": jax.ShapeDtypeStruct((B, S, cfg.kv_lora_rank), cfg.cdtype),
+                "k_rope": jax.ShapeDtypeStruct((B, S, cfg.qk_rope_dim), cfg.cdtype),
+            }
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        return {"k": jax.ShapeDtypeStruct((B, S, K, hd), cfg.cdtype),
+                "v": jax.ShapeDtypeStruct((B, S, K, hd), cfg.cdtype)}
+
+    def cache_specs(self, B, S):
+        # NOTE: the local cache is allocated at full S (a ring buffer of
+        # size `local_window` is the memory-optimal layout; recorded as a
+        # hillclimb candidate in EXPERIMENTS.md SS Perf).
+        unit = (
+            {"local": self._attn_cache_spec(B, S),
+             "global": self._attn_cache_spec(B, S)}
+            if self.pair else self._attn_cache_spec(B, S))
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self.units,) + s.shape, s.dtype), unit)
+
+    def input_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        B = shape.global_batch
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        S = shape.seq_len
+        sp = {}
+        if cfg.family == "vlm":
+            n_img = cfg.num_image_tokens
+            sp["image_embeds"] = jax.ShapeDtypeStruct(
+                (B, n_img, cfg.d_model), cfg.cdtype)
+            sp["tokens"] = jax.ShapeDtypeStruct((B, S - n_img), jnp.int32)
+        else:
+            sp["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        if shape.kind == "train":
+            sp["targets"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+            if cfg.family == "vlm":
+                sp["loss_mask"] = jax.ShapeDtypeStruct((B, S), F32)
+        return sp
+
+    def scan_info(self):
+        return {"layers": (self.units, (self.units,))}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 model (attention-free)
+# ---------------------------------------------------------------------------
+
+class RWKVModel:
+    def __init__(self, cfg: ModelConfig, segments=None):
+        self.cfg = cfg
+        self.units = cfg.num_layers
+        self.segments = tuple(segments) if segments else (self.units,)
+        assert sum(self.segments) == self.units
+
+    def _init_unit(self, ini: Init):
+        cfg = self.cfg
+        p = S.init_rwkv6(ini, cfg)
+        p["ln1"] = ini.ones((cfg.d_model,), cfg.pdtype)
+        p["ln2"] = ini.ones((cfg.d_model,), cfg.pdtype)
+        return p
+
+    def init(self, key):
+        cfg = self.cfg
+        ini = Init(key)
+        params = {
+            "embed": ini.dense((cfg.padded_vocab, cfg.d_model), cfg.pdtype),
+            "final_norm": ini.ones((cfg.d_model,), cfg.pdtype),
+            "layers": _stack_init(ini.take(), self.units, self._init_unit),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = ini.dense(
+                (cfg.d_model, cfg.padded_vocab), cfg.pdtype)
+        return params
+
+    def _stack(self, params, x, states, decode: bool):
+        cfg = self.cfg
+
+        def body(x, per_layer):
+            p, st = per_layer if states is not None else (per_layer, None)
+            p = dsh.gather_params(p)
+            h = _norm(p["ln1"], x, cfg.norm_eps)
+            tm_state = None if st is None else {"S": st["S"], "last": st["last_tm"]}
+            if decode:
+                y, tm_new = S.rwkv6_time_mix_decode(p["tm"], h, cfg, tm_state)
+            else:
+                y, tm_new = S.rwkv6_time_mix(p["tm"], h, cfg, tm_state)
+            x = x + y
+            h = _norm(p["ln2"], x, cfg.norm_eps)
+            y, cm_last = S.rwkv6_channel_mix(
+                p["cm"], h, cfg, None if st is None else st["last_cm"])
+            x = x + y
+            new_st = None if st is None else {
+                "S": tm_new["S"], "last_tm": tm_new["last"], "last_cm": cm_last}
+            return x, new_st
+
+        stacked = params["layers"] if states is None else (params["layers"], states)
+        x, new_states = layer_scan(body, x, stacked, self.segments, cfg.remat)
+        return _norm(params["final_norm"], x, cfg.norm_eps), new_states
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        params = gather_outer(params)
+        x = embed_tokens(params, batch["tokens"], cfg)
+        x, _ = self._stack(params, x, None, False)
+        logits = unembed(params, x, cfg)
+        return ce_loss(logits, batch["targets"], batch.get("loss_mask"))
+
+    def prefill(self, params, batch, states):
+        cfg = self.cfg
+        params = gather_outer(params)
+        x = embed_tokens(params, batch["tokens"], cfg)
+        x, new_states = self._stack(params, x, states, False)
+        logits = unembed(params, x[:, -1:], cfg)
+        return logits[:, 0], new_states
+
+    def decode_step(self, params, states, tokens, index):
+        cfg = self.cfg
+        params = gather_outer(params)
+        x = embed_tokens(params, tokens, cfg)
+        x, new_states = self._stack(params, x, states, True)
+        logits = unembed(params, x, cfg)
+        return logits[:, 0], new_states
+
+    def cache_specs(self, B, S):
+        u = {
+            "S": jax.ShapeDtypeStruct((B, self.cfg.rwkv_heads,
+                                       self.cfg.rwkv_head_dim,
+                                       self.cfg.rwkv_head_dim), F32),
+            "last_tm": jax.ShapeDtypeStruct((B, self.cfg.d_model), self.cfg.cdtype),
+            "last_cm": jax.ShapeDtypeStruct((B, self.cfg.d_model), self.cfg.cdtype),
+        }
+        return jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self.units,) + s.shape, s.dtype), u)
+
+    def input_specs(self, shape: ShapeConfig):
+        B = shape.global_batch
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        sp = {"tokens": jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)}
+        if shape.kind == "train":
+            sp["targets"] = jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)
+        return sp
+
+    def scan_info(self):
+        return {"layers": (self.units, (self.units,))}
+
+
+# ---------------------------------------------------------------------------
+# Hybrid model (zamba2: mamba2 backbone + shared attention block)
+# ---------------------------------------------------------------------------
+
+class HybridModel:
+    """Mamba2 layers in groups of `shared_attn_every`, with ONE weight-shared
+    attention block applied between groups (input = concat(hidden, embeds))."""
+
+    def __init__(self, cfg: ModelConfig, segments=None):
+        self.cfg = cfg
+        self.units = cfg.num_layers
+        k = cfg.shared_attn_every
+        if segments is None:
+            segs, rem = [], cfg.num_layers
+            while rem > 0:
+                segs.append(min(k, rem))
+                rem -= min(k, rem)
+            segments = tuple(segs)
+        self.segments = tuple(segments)
+        assert sum(self.segments) == self.units
+        # shared block applied after every FULL group except the last segment
+        self.n_shared = max(1, (cfg.num_layers - 1) // k)
+
+    def _init_unit(self, ini: Init):
+        cfg = self.cfg
+        p = {"mamba": S.init_mamba2(ini, cfg),
+             "ln": ini.ones((cfg.d_model,), cfg.pdtype)}
+        return p
+
+    def init(self, key):
+        cfg = self.cfg
+        ini = Init(key)
+        d = cfg.d_model
+        shared = {
+            "proj": ini.dense((2 * d, d), cfg.pdtype),
+            "ln1": ini.ones((d,), cfg.pdtype),
+            "ln2": ini.ones((d,), cfg.pdtype),
+            "attn": Lyr.init_attn(ini, cfg),
+            "mlp": Lyr.init_mlp(ini, cfg),
+        }
+        return {
+            "embed": ini.dense((cfg.padded_vocab, d), cfg.pdtype),
+            "final_norm": ini.ones((d,), cfg.pdtype),
+            "shared": shared,
+            "layers": _stack_init(ini.take(), self.units, self._init_unit),
+        }
+
+    def _shared_block(self, p, x, x0, positions, cache, index):
+        cfg = self.cfg
+        h = jnp.concatenate([x, x0], axis=-1) @ p["proj"].astype(cfg.cdtype)
+        a, new_cache = Lyr.attention(
+            p["attn"], _norm(p["ln1"], h, cfg.norm_eps), positions, cfg,
+            cache=cache, cache_index=index)
+        h = h + a
+        h = h + Lyr.mlp(p["mlp"], _norm(p["ln2"], h, cfg.norm_eps), cfg)
+        return x + h, new_cache
+
+    def _forward(self, params, x, positions, caches, index, decode: bool):
+        cfg = self.cfg
+        x0 = x
+        mamba_states = None if caches is None else caches["mamba"]
+        kv_caches = None if caches is None else caches["shared_kv"]
+
+        def body(x, per_layer):
+            p, st = per_layer if mamba_states is not None else (per_layer, None)
+            p = dsh.gather_params(p)
+            h = _norm(p["ln"], x, cfg.norm_eps)
+            if decode:
+                y, new_st = S.mamba2_decode(p["mamba"], h, cfg, st)
+            else:
+                y, new_st = S.mamba2_mix(p["mamba"], h, cfg, st)
+            return x + y, new_st
+
+        new_states, new_kv = [], []
+        start = 0
+        for gi, seg in enumerate(self.segments):
+            stacked = jax.tree.map(lambda a: a[start:start + seg],
+                                   params["layers"] if mamba_states is None
+                                   else (params["layers"], mamba_states))
+            b = body
+            if cfg.remat == "full" and not decode:
+                b = jax.checkpoint(
+                    b, policy=jax.checkpoint_policies.nothing_saveable)
+            x, ys = jax.lax.scan(b, x, stacked)
+            new_states.append(ys)
+            start += seg
+            if gi < self.n_shared:
+                kv = None if kv_caches is None else kv_caches[gi]
+                x, nkv = self._shared_block(
+                    params["shared"], x, x0, positions, kv, index)
+                new_kv.append(nkv)
+        x = _norm(params["final_norm"], x, cfg.norm_eps)
+        if caches is None:
+            return x, None
+        new_states = jax.tree.map(lambda *zs: jnp.concatenate(zs, 0),
+                                  *new_states)
+        return x, {"mamba": new_states, "shared_kv": new_kv}
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        params = gather_outer(params)
+        x = embed_tokens(params, batch["tokens"], cfg)
+        B, Sq, _ = x.shape
+        x, _ = self._forward(params, x, _positions(B, Sq), None, None, False)
+        logits = unembed(params, x, cfg)
+        return ce_loss(logits, batch["targets"], batch.get("loss_mask"))
+
+    def prefill(self, params, batch, caches):
+        cfg = self.cfg
+        params = gather_outer(params)
+        x = embed_tokens(params, batch["tokens"], cfg)
+        B, Sq, _ = x.shape
+        x, caches = self._forward(params, x, _positions(B, Sq), caches, None, False)
+        logits = unembed(params, x[:, -1:], cfg)
+        return logits[:, 0], caches
+
+    def decode_step(self, params, caches, tokens, index):
+        cfg = self.cfg
+        params = gather_outer(params)
+        x = embed_tokens(params, tokens, cfg)
+        positions = jnp.broadcast_to(index, (x.shape[0], 1)).astype(jnp.int32)
+        x, caches = self._forward(params, x, positions, caches, index, True)
+        logits = unembed(params, x, cfg)
+        return logits[:, 0], caches
+
+    def cache_specs(self, B, Scache):
+        cfg = self.cfg
+        st = S.mamba2_state_specs(cfg, B)
+        stacked = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self.units,) + s.shape, s.dtype), st)
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        kv = [{"k": jax.ShapeDtypeStruct((B, Scache, K, hd), cfg.cdtype),
+               "v": jax.ShapeDtypeStruct((B, Scache, K, hd), cfg.cdtype)}
+              for _ in range(self.n_shared)]
+        return {"mamba": stacked, "shared_kv": kv}
+
+    def input_specs(self, shape: ShapeConfig):
+        B = shape.global_batch
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        sp = {"tokens": jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)}
+        if shape.kind == "train":
+            sp["targets"] = jax.ShapeDtypeStruct((B, shape.seq_len), jnp.int32)
+        return sp
+
+    def scan_info(self):
+        return {"layers": (self.units, self.segments)}
+
+
+# ---------------------------------------------------------------------------
+# Encoder-decoder (seamless: audio frontend stub -> text decoder)
+# ---------------------------------------------------------------------------
+
+class EncDecModel:
+    def __init__(self, cfg: ModelConfig, segments=None):
+        self.cfg = cfg
+        self.enc_units = cfg.enc_layers
+        self.dec_units = cfg.dec_layers
+        segments = segments or {}
+        self.enc_segments = tuple(segments.get("enc", (self.enc_units,)))
+        self.dec_segments = tuple(segments.get("dec", (self.dec_units,)))
+
+    def _init_enc_unit(self, ini: Init):
+        cfg = self.cfg
+        return {"ln1": ini.ones((cfg.d_model,), cfg.pdtype),
+                "ln2": ini.ones((cfg.d_model,), cfg.pdtype),
+                "attn": Lyr.init_attn(ini, cfg),
+                "mlp": Lyr.init_mlp(ini, cfg)}
+
+    def _init_dec_unit(self, ini: Init):
+        cfg = self.cfg
+        return {"ln1": ini.ones((cfg.d_model,), cfg.pdtype),
+                "ln2": ini.ones((cfg.d_model,), cfg.pdtype),
+                "ln3": ini.ones((cfg.d_model,), cfg.pdtype),
+                "attn": Lyr.init_attn(ini, cfg),
+                "xattn": Lyr.init_cross_attn(ini, cfg),
+                "mlp": Lyr.init_mlp(ini, cfg)}
+
+    def init(self, key):
+        cfg = self.cfg
+        ini = Init(key)
+        params = {
+            "embed": ini.dense((cfg.padded_vocab, cfg.d_model), cfg.pdtype),
+            "enc_norm": ini.ones((cfg.d_model,), cfg.pdtype),
+            "final_norm": ini.ones((cfg.d_model,), cfg.pdtype),
+            "enc_layers": _stack_init(ini.take(), self.enc_units,
+                                      self._init_enc_unit),
+            "dec_layers": _stack_init(ini.take(), self.dec_units,
+                                      self._init_dec_unit),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = ini.dense(
+                (cfg.d_model, cfg.padded_vocab), cfg.pdtype)
+        return params
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        x = frames.astype(cfg.cdtype)
+        B, T, _ = x.shape
+        pos = _positions(B, T)
+
+        def body(x, p):
+            p = dsh.gather_params(p)
+            h = _norm(p["ln1"], x, cfg.norm_eps)
+            a, _ = Lyr.attention(p["attn"], h, pos, cfg, causal=False)
+            x = x + a
+            h = _norm(p["ln2"], x, cfg.norm_eps)
+            return x + Lyr.mlp(p["mlp"], h, cfg), None
+
+        x, _ = layer_scan(body, x, params["enc_layers"], self.enc_segments,
+                          cfg.remat)
+        return _norm(params["enc_norm"], x, cfg.norm_eps)
+
+    def _decode_stack(self, params, x, enc_out, positions, caches, index):
+        cfg = self.cfg
+
+        def body(x, per_layer):
+            p, cache = per_layer if caches is not None else (per_layer, None)
+            p = dsh.gather_params(p)
+            h = _norm(p["ln1"], x, cfg.norm_eps)
+            a, new_cache = Lyr.attention(p["attn"], h, positions, cfg,
+                                         cache=cache, cache_index=index)
+            x = x + a
+            h = _norm(p["ln2"], x, cfg.norm_eps)
+            x = x + Lyr.cross_attention(p["xattn"], h, enc_out, cfg)
+            h = _norm(p["ln3"], x, cfg.norm_eps)
+            return x + Lyr.mlp(p["mlp"], h, cfg), new_cache
+
+        stacked = params["dec_layers"] if caches is None else \
+            (params["dec_layers"], caches)
+        x, new_caches = layer_scan(body, x, stacked, self.dec_segments,
+                                   cfg.remat)
+        return _norm(params["final_norm"], x, cfg.norm_eps), new_caches
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        params = gather_outer(params)
+        enc_out = self._encode(params, batch["audio_frames"])
+        x = embed_tokens(params, batch["tokens"], cfg)
+        B, Sq, _ = x.shape
+        x, _ = self._decode_stack(params, x, enc_out, _positions(B, Sq),
+                                  None, None)
+        logits = unembed(params, x, cfg)
+        return ce_loss(logits, batch["targets"], batch.get("loss_mask"))
+
+    def prefill(self, params, batch, caches):
+        cfg = self.cfg
+        params = gather_outer(params)
+        enc_out = self._encode(params, batch["audio_frames"])
+        x = embed_tokens(params, batch["tokens"], cfg)
+        B, Sq, _ = x.shape
+        x, kv = self._decode_stack(params, x, enc_out,
+                                   _positions(B, Sq), caches["self_kv"], None)
+        logits = unembed(params, x[:, -1:], cfg)
+        return logits[:, 0], {"self_kv": kv, "enc_out": enc_out}
+
+    def decode_step(self, params, caches, tokens, index):
+        cfg = self.cfg
+        params = gather_outer(params)
+        x = embed_tokens(params, tokens, cfg)
+        positions = jnp.broadcast_to(index, (x.shape[0], 1)).astype(jnp.int32)
+        x, kv = self._decode_stack(params, x, caches["enc_out"], positions,
+                                   caches["self_kv"], index)
+        logits = unembed(params, x, cfg)
+        return logits[:, 0], {"self_kv": kv, "enc_out": caches["enc_out"]}
+
+    def cache_specs(self, B, Scache):
+        cfg = self.cfg
+        K, hd = cfg.num_kv_heads, cfg.head_dim
+        unit = {"k": jax.ShapeDtypeStruct((B, Scache, K, hd), cfg.cdtype),
+                "v": jax.ShapeDtypeStruct((B, Scache, K, hd), cfg.cdtype)}
+        kv = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct((self.dec_units,) + s.shape, s.dtype),
+            unit)
+        Te = Scache // cfg.enc_frames_ratio
+        return {"self_kv": kv,
+                "enc_out": jax.ShapeDtypeStruct((B, Te, cfg.d_model), cfg.cdtype)}
+
+    def input_specs(self, shape: ShapeConfig):
+        cfg = self.cfg
+        B = shape.global_batch
+        if shape.kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        S_ = shape.seq_len
+        Te = S_ // cfg.enc_frames_ratio
+        sp = {"audio_frames": jax.ShapeDtypeStruct((B, Te, cfg.d_model), cfg.cdtype),
+              "tokens": jax.ShapeDtypeStruct((B, S_), jnp.int32)}
+        if shape.kind == "train":
+            sp["targets"] = jax.ShapeDtypeStruct((B, S_), jnp.int32)
+        return sp
+
+    def scan_info(self):
+        return {"enc": (self.enc_units, self.enc_segments),
+                "dec": (self.dec_units, self.dec_segments)}
+
+
+# ---------------------------------------------------------------------------
+# builder
+# ---------------------------------------------------------------------------
+
+def build_model(cfg: ModelConfig, segments=None):
+    if cfg.family in ("dense", "moe", "mla", "vlm"):
+        return DecoderModel(cfg, segments)
+    if cfg.family == "ssm":
+        return RWKVModel(cfg, segments)
+    if cfg.family == "hybrid":
+        return HybridModel(cfg, segments)
+    if cfg.family == "audio":
+        return EncDecModel(cfg, segments)
+    raise ValueError(f"unknown family {cfg.family}")

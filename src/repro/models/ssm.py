@@ -1,0 +1,372 @@
+"""State-space / linear-attention sequence mixers: Mamba2 (SSD) and RWKV6.
+
+Both use the chunked formulation: within-chunk work is batched matmuls
+(parallel over chunks -> full FLOP visibility for the roofline), and only a
+tiny cross-chunk state stitch runs under lax.scan.  Decode is a single-step
+state update (O(1) memory -- the reason these archs own the long_500k cell).
+
+Numerical notes:
+  * Mamba2 decays: dA = dt * A <= 0, and every exponent is a difference
+    cs_t - cs_s with t >= s, hence <= 0: stable by construction.
+  * RWKV6 per-channel data-dependent decay (the "Finch" hallmark) uses the
+    factored intra-chunk form r*exp(cs_prev) / k*exp(-cs); the per-step
+    log-decay is clamped to [-RWKV_MAX_DECAY, -1e-6] so exp(|cs|) stays
+    within f32 over a chunk (DESIGN.md records this deviation; a log-domain
+    Pallas kernel would remove it).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.models.layers import Init, rmsnorm
+
+F32 = jnp.float32
+RWKV_MAX_DECAY = 2.5   # max -log(w) per step; 32-step chunk => exp(80) < f32 max
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, single B/C group)
+# ---------------------------------------------------------------------------
+
+def init_mamba2(ini: Init, cfg: ModelConfig):
+    """Projections are split per component (z/x/B/C/dt) instead of one
+    concatenated in_proj: slicing a TP-sharded concat dim crosses shard
+    boundaries, while separate weights shard cleanly on their own dims."""
+    d, di = cfg.d_model, cfg.ssm_inner
+    ds, nh, ck = cfg.ssm_state, cfg.ssm_heads, cfg.ssm_conv
+    pd = cfg.pdtype
+    return {
+        "wz": ini.dense((d, di), pd),
+        "wx": ini.dense((d, di), pd),
+        "wB": ini.dense((d, ds), pd),
+        "wC": ini.dense((d, ds), pd),
+        "wdt": ini.dense((d, nh), pd),
+        "conv_w": ini.dense((ck, di + 2 * ds), pd, scale=0.5),
+        "conv_b": ini.zeros((di + 2 * ds,), pd),
+        "A_log": ini.dense((nh,), pd, scale=1.0),
+        "D": ini.ones((nh,), pd),
+        "dt_bias": ini.zeros((nh,), pd),
+        "norm": ini.ones((di,), pd),
+        "out_proj": ini.dense((di, d), pd),
+    }
+
+
+def _causal_conv(xBC, w, b, tail=None):
+    """Depthwise causal conv via static shifts.  xBC (B,S,C); w (ck,C).
+
+    tail: (B, ck-1, C) previous inputs (decode/chunk continuation) or None.
+    Returns (out (B,S,C), new_tail (B, ck-1, C)).
+    """
+    B, S, C = xBC.shape
+    ck = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((B, ck - 1, C), xBC.dtype)
+    ext = jnp.concatenate([tail, xBC], axis=1)          # (B, S+ck-1, C)
+    out = jnp.zeros((B, S, C), xBC.dtype)
+    for j in range(ck):
+        out = out + ext[:, j: j + S] * w[j]
+    new_tail = ext[:, -(ck - 1):] if ck > 1 else tail
+    return jax.nn.silu(out + b), new_tail
+
+
+def _project(p, x, dt_):
+    """x (B,S,D) -> z (B,S,di), xBC (B,S,di+2ds), dt (B,S,nh)."""
+    z = x @ p["wz"].astype(dt_)
+    xc = x @ p["wx"].astype(dt_)
+    Bv = x @ p["wB"].astype(dt_)
+    Cv = x @ p["wC"].astype(dt_)
+    dt = x @ p["wdt"].astype(dt_)
+    return z, jnp.concatenate([xc, Bv, Cv], axis=-1), dt
+
+
+def mamba2_mix(p, x, cfg: ModelConfig, state=None):
+    """Training/prefill path (chunked SSD).  x (B,S,D).
+
+    state: None or {"h": (B,nh,hp,ds), "conv": (B,ck-1,di+2ds)}.
+    Returns (y (B,S,D), new_state).
+    """
+    B, S, D = x.shape
+    di, ds = cfg.ssm_inner, cfg.ssm_state
+    nh, hp, ck = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+    dt_ = cfg.cdtype
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, f"seq {S} must be divisible by ssm_chunk {Q}"
+    NC = S // Q
+
+    z, xBC, dt = _project(p, x, dt_)
+    tail = state["conv"] if state is not None else None
+    xBC, new_tail = _causal_conv(xBC, p["conv_w"].astype(dt_),
+                                 p["conv_b"].astype(dt_), tail)
+    xc = xBC[..., :di]
+    Bv = xBC[..., di: di + ds].astype(F32)
+    Cv = xBC[..., di + ds:].astype(F32)
+
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))  # (B,S,nh)
+    A = -jnp.exp(p["A_log"].astype(F32))                             # (nh,)
+    dA = dt * A                                                      # <= 0
+    xh = xc.reshape(B, S, nh, hp).astype(F32)
+    u = xh * dt[..., None]                                           # B x dt
+
+    # chunk
+    r = lambda t, extra=(): t.reshape((B, NC, Q) + extra)
+    uc = u.reshape(B, NC, Q, nh, hp)
+    Bc = Bv.reshape(B, NC, Q, ds)
+    Cc = Cv.reshape(B, NC, Q, ds)
+    dAc = dA.reshape(B, NC, Q, nh)
+    cs = jnp.cumsum(dAc, axis=2)                                     # inclusive
+
+    # intra-chunk: y[t] = sum_{s<=t} (C_t.B_s) exp(cs_t - cs_s) u_s
+    # mask the exponent BEFORE exp: upper-triangle (s > t) differences are
+    # positive and would overflow -> inf * 0 = NaN.
+    scores = jnp.einsum("bnqd,bnsd->bnqs", Cc, Bc)                   # shared heads
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]               # (B,NC,Q,Q,nh)
+    tri = np.tril(np.ones((Q, Q), bool))
+    L = jnp.exp(jnp.where(tri[None, None, :, :, None], diff, -jnp.inf))
+    att = scores[..., None] * L                                      # (B,NC,Q,Q,nh)
+    y_intra = jnp.einsum("bnqsh,bnshp->bnqhp", att, uc)
+
+    # chunk states: S_n = sum_s B_s u_s exp(cs_end - cs_s)
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)                    # (B,NC,Q,nh)
+    S_n = jnp.einsum("bnsd,bnshp,bnsh->bnhpd", Bc, uc, decay_to_end)
+    gamma = jnp.exp(cs[:, :, -1])                                    # (B,NC,nh)
+
+    # cross-chunk stitch (small scan)
+    h0 = state["h"].astype(F32) if state is not None else \
+        jnp.zeros((B, nh, hp, ds), F32)
+
+    def step(h, inp):
+        g_n, s_n = inp
+        h_new = h * g_n[..., None, None] + s_n
+        return h_new, h          # emit state at chunk START
+
+    (h_last, h_prev) = jax.lax.scan(
+        step, h0, (jnp.moveaxis(gamma, 1, 0), jnp.moveaxis(S_n, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)                              # (B,NC,...)
+
+    # inter-chunk: y[t] += C_t . (exp(cs_t) * h_prev)
+    y_inter = jnp.einsum("bnqd,bnqh,bnhpd->bnqhp", Cc, jnp.exp(cs), h_prev)
+
+    y = (y_intra + y_inter).reshape(B, S, nh, hp) + \
+        xh * p["D"].astype(F32)[None, None, :, None]
+    y = y.reshape(B, S, di).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    y = y @ p["out_proj"].astype(dt_)
+    new_state = {"h": h_last.astype(F32), "conv": new_tail}
+    return y, new_state
+
+
+def mamba2_decode(p, x, cfg: ModelConfig, state):
+    """Single-token step.  x (B,1,D); state as above."""
+    B, _, D = x.shape
+    di, ds = cfg.ssm_inner, cfg.ssm_state
+    nh, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    dt_ = cfg.cdtype
+
+    z, xBC, dt = _project(p, x, dt_)
+    xBC, new_tail = _causal_conv(xBC, p["conv_w"].astype(dt_),
+                                 p["conv_b"].astype(dt_), state["conv"])
+    xc = xBC[..., :di]
+    Bv = xBC[:, 0, di: di + ds].astype(F32)                    # (B, ds)
+    Cv = xBC[:, 0, di + ds:].astype(F32)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(F32) + p["dt_bias"].astype(F32))
+    A = -jnp.exp(p["A_log"].astype(F32))
+    g = jnp.exp(dt * A)                                        # (B, nh)
+    xh = xc[:, 0].reshape(B, nh, hp).astype(F32)
+    u = xh * dt[..., None]
+
+    h = state["h"].astype(F32)                                 # (B,nh,hp,ds)
+    h = h * g[..., None, None] + jnp.einsum("bd,bhp->bhpd", Bv, u)
+    y = jnp.einsum("bhpd,bd->bhp", h, Cv) + xh * p["D"].astype(F32)[None, :, None]
+    y = y.reshape(B, 1, di).astype(dt_)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, p["norm"], cfg.norm_eps)
+    y = y @ p["out_proj"].astype(dt_)
+    return y, {"h": h, "conv": new_tail}
+
+
+def mamba2_state_specs(cfg: ModelConfig, batch: int):
+    di, ds = cfg.ssm_inner, cfg.ssm_state
+    nh, hp, ck = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_conv
+    return {
+        "h": jax.ShapeDtypeStruct((batch, nh, hp, ds), F32),
+        "conv": jax.ShapeDtypeStruct((batch, ck - 1, di + 2 * ds), cfg.cdtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 ("Finch"): time-mix with data-dependent per-channel decay + u bonus,
+# and squared-relu channel-mix.
+# ---------------------------------------------------------------------------
+
+def init_rwkv6(ini: Init, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    pd = cfg.pdtype
+    lora = 64
+    return {
+        "tm": {
+            "mu_r": ini.dense((d,), pd, 0.5), "mu_k": ini.dense((d,), pd, 0.5),
+            "mu_v": ini.dense((d,), pd, 0.5), "mu_w": ini.dense((d,), pd, 0.5),
+            "mu_g": ini.dense((d,), pd, 0.5),
+            "w0": ini.dense((d,), pd, 0.5),
+            "w_a": ini.dense((d, lora), pd), "w_b": ini.dense((lora, d), pd),
+            "u": ini.dense((d,), pd, 0.5),
+            "wr": ini.dense((d, d), pd), "wk": ini.dense((d, d), pd),
+            "wv": ini.dense((d, d), pd), "wg": ini.dense((d, d), pd),
+            "wo": ini.dense((d, d), pd),
+            "ln_x": ini.ones((d,), pd),
+        },
+        "cm": {
+            "mu_k": ini.dense((d,), pd, 0.5), "mu_r": ini.dense((d,), pd, 0.5),
+            "wk": ini.dense((d, f), pd), "wv": ini.dense((f, d), pd),
+            "wr": ini.dense((d, d), pd),
+        },
+    }
+
+
+def _token_shift(x, last):
+    """prev-token features; last (B,D) carries across calls (or zeros)."""
+    if last is None:
+        last = jnp.zeros((x.shape[0], x.shape[-1]), x.dtype)
+    shifted = jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+    return shifted, x[:, -1]
+
+
+def _mix(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _log_decay(p, xw, dt_):
+    """per-channel log decay in (-RWKV_MAX_DECAY, -1e-6].
+
+    The LoRA matmuls run in the compute dtype (bf16): their gradients are
+    activation-sized (B,S,D) all-reduces under TP, and f32 doubles that
+    traffic (SSPerf cell 2, iteration 2); only exp/clip stay f32."""
+    lo = xw.astype(dt_) @ p["w_a"].astype(dt_)
+    lo = jnp.tanh(lo) @ p["w_b"].astype(dt_)
+    rate = jnp.exp(p["w0"].astype(F32) + lo.astype(F32))  # -log w, > 0
+    return -jnp.clip(rate, 1e-6, RWKV_MAX_DECAY)
+
+
+def rwkv6_time_mix(p, x, cfg: ModelConfig, state=None):
+    """Chunked linear attention.  x (B,S,D).
+
+    state: None or {"S": (B,nh,hd,hd) f32, "last": (B,D)}.
+    """
+    B, S, D = x.shape
+    nh, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    dt_ = cfg.cdtype
+    Q = min(cfg.rwkv_chunk, S)
+    assert S % Q == 0
+    NC = S // Q
+
+    last = state["last"] if state is not None else None
+    xs, new_last = _token_shift(x, last)
+    xr = _mix(x, xs, p["mu_r"]); xk = _mix(x, xs, p["mu_k"])
+    xv = _mix(x, xs, p["mu_v"]); xw = _mix(x, xs, p["mu_w"])
+    xg = _mix(x, xs, p["mu_g"])
+    r = (xr @ p["wr"].astype(dt_)).astype(F32).reshape(B, S, nh, hd)
+    k = (xk @ p["wk"].astype(dt_)).astype(F32).reshape(B, S, nh, hd)
+    v = (xv @ p["wv"].astype(dt_)).astype(F32).reshape(B, S, nh, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt_))
+    logw = _log_decay(p, xw, dt_).reshape(B, S, nh, hd)
+    u = p["u"].astype(F32).reshape(nh, hd)
+
+    rc = r.reshape(B, NC, Q, nh, hd)
+    kc = k.reshape(B, NC, Q, nh, hd)
+    vc = v.reshape(B, NC, Q, nh, hd)
+    lw = logw.reshape(B, NC, Q, nh, hd)
+    cs = jnp.cumsum(lw, axis=2)                          # inclusive, <= 0
+    cs_prev = cs - lw                                    # exclusive
+
+    # intra-chunk (strictly earlier tokens): factored stable form
+    r_s = rc * jnp.exp(cs_prev)
+    k_s = kc * jnp.exp(-cs)                              # bounded by clamp
+    att = jnp.einsum("bnqhd,bnshd->bnhqs", r_s, k_s)
+    tri = np.tril(np.ones((Q, Q), np.float32), k=-1)     # strict lower
+    att = att * tri[None, None, None]
+    y = jnp.einsum("bnhqs,bnshd->bnqhd", att, vc)
+    # current-token bonus: (sum_d r_d u_d k_d) * v
+    bonus = jnp.einsum("bnqhd,hd,bnqhd->bnqh", rc, u, kc)
+    y = y + bonus[..., None] * vc
+
+    # chunk states
+    decay_to_end = jnp.exp(cs[:, :, -1:, :, :] - cs)
+    S_n = jnp.einsum("bnshd,bnshv->bnhdv", kc * decay_to_end, vc)
+    gamma = jnp.exp(cs[:, :, -1])                        # (B,NC,nh,hd)
+
+    h0 = state["S"].astype(F32) if state is not None else \
+        jnp.zeros((B, nh, hd, hd), F32)
+
+    def step(h, inp):
+        g_n, s_n = inp
+        return h * g_n[..., None] + s_n, h
+
+    h_last, h_prev = jax.lax.scan(
+        step, h0, (jnp.moveaxis(gamma, 1, 0), jnp.moveaxis(S_n, 1, 0)))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)
+
+    y = y + jnp.einsum("bnqhd,bnhdv->bnqhv", r_s, h_prev)
+
+    # per-head group norm, gate, out proj
+    y = y.reshape(B, S, nh, hd)
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = (y.reshape(B, S, D) * p["ln_x"].astype(F32)).astype(dt_)
+    y = (y * g) @ p["wo"].astype(dt_)
+    return y, {"S": h_last, "last": new_last}
+
+
+def rwkv6_time_mix_decode(p, x, cfg: ModelConfig, state):
+    B, _, D = x.shape
+    nh, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    dt_ = cfg.cdtype
+    xs = state["last"][:, None]
+    xr = _mix(x, xs, p["mu_r"]); xk = _mix(x, xs, p["mu_k"])
+    xv = _mix(x, xs, p["mu_v"]); xw = _mix(x, xs, p["mu_w"])
+    xg = _mix(x, xs, p["mu_g"])
+    r = (xr @ p["wr"].astype(dt_)).astype(F32).reshape(B, nh, hd)
+    k = (xk @ p["wk"].astype(dt_)).astype(F32).reshape(B, nh, hd)
+    v = (xv @ p["wv"].astype(dt_)).astype(F32).reshape(B, nh, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt_))
+    w = jnp.exp(_log_decay(p, xw, dt_)).reshape(B, nh, hd)
+    u = p["u"].astype(F32).reshape(nh, hd)
+
+    S = state["S"].astype(F32)                            # (B,nh,hd,hd)
+    wkv = S + jnp.einsum("bhd,bhv->bhdv", u[None].repeat(B, 0) * k, v)
+    y = jnp.einsum("bhd,bhdv->bhv", r, wkv)
+    S = S * w[..., None] + jnp.einsum("bhd,bhv->bhdv", k, v)
+
+    y = y.reshape(B, 1, nh, hd)
+    mean = y.mean(-1, keepdims=True)
+    var = y.var(-1, keepdims=True)
+    y = (y - mean) * jax.lax.rsqrt(var + 64e-5)
+    y = (y.reshape(B, 1, D) * p["ln_x"].astype(F32)).astype(dt_)
+    y = (y * g) @ p["wo"].astype(dt_)
+    return y, {"S": S, "last": x[:, -1]}
+
+
+def rwkv6_channel_mix(p, x, cfg: ModelConfig, last=None):
+    dt_ = cfg.cdtype
+    xs, new_last = _token_shift(x, last)
+    xk = _mix(x, xs, p["mu_k"])
+    xr = _mix(x, xs, p["mu_r"])
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(dt_)))
+    kv = k @ p["wv"].astype(dt_)
+    return jax.nn.sigmoid(xr @ p["wr"].astype(dt_)) * kv, new_last
+
+
+def rwkv6_state_specs(cfg: ModelConfig, batch: int):
+    nh, hd = cfg.rwkv_heads, cfg.rwkv_head_dim
+    return {
+        "S": jax.ShapeDtypeStruct((batch, nh, hd, hd), F32),
+        "last_tm": jax.ShapeDtypeStruct((batch, cfg.d_model), cfg.cdtype),
+        "last_cm": jax.ShapeDtypeStruct((batch, cfg.d_model), cfg.cdtype),
+    }

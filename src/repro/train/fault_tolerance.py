@@ -1,0 +1,134 @@
+"""Fault tolerance: restart management, straggler detection, elastic plans.
+
+Designed for the 1000+-node regime:
+  * RestartManager -- resume from the newest VALID checkpoint, walking
+    backwards past corrupted ones (integrity = CRC + RSA signature from
+    train/checkpoint.py); a crash between save and prune is safe because
+    saves are atomic.
+  * StragglerMonitor -- per-step wall-time EWMA + median window; flags
+    outliers (slow host / failing HBM / thermal throttle) and recommends
+    an action.  On a real pod the action hooks into the job controller
+    (hot-spare swap / checkpoint-and-restart without the straggler).
+  * ElasticPlan -- given a new chip count, produce the new mesh shape and
+    resharding plan; checkpoints are layout-free so restore-on-new-mesh
+    is just device_put with new shardings (tested in
+    tests/test_distributed.py with subprocess device counts).
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, List, Optional
+
+import numpy as np
+
+from repro.train import checkpoint as CKPT
+
+
+class RestartManager:
+    def __init__(self, ckpt_dir):
+        self.ckpt_dir = ckpt_dir
+
+    def latest_valid_step(self) -> Optional[int]:
+        for step in reversed(CKPT.list_steps(self.ckpt_dir)):
+            path = f"{self.ckpt_dir}/step_{step:09d}"
+            try:
+                CKPT.validate(path)
+                return step
+            except CKPT.CheckpointError:
+                continue
+        return None
+
+    def resume(self, state_template, shardings=None):
+        """Returns (step, state) from the newest valid checkpoint, or
+        (None, None) for a cold start."""
+        step = self.latest_valid_step()
+        if step is None:
+            return None, None
+        state, _ = CKPT.restore(
+            f"{self.ckpt_dir}/step_{step:09d}", state_template,
+            shardings=shardings)
+        return step, state
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    step_time: float
+    median: float
+    ratio: float
+    action: str
+
+
+class StragglerMonitor:
+    """Flags steps slower than `threshold` x rolling median."""
+
+    def __init__(self, window: int = 50, threshold: float = 2.0,
+                 trip_count: int = 3):
+        self.window = window
+        self.threshold = threshold
+        self.trip_count = trip_count
+        self.times: List[float] = []
+        self.events: List[StragglerEvent] = []
+        self._consecutive = 0
+        self._last = None
+
+    def start(self):
+        self._last = time.monotonic()
+
+    def stop(self, step: int) -> Optional[StragglerEvent]:
+        assert self._last is not None
+        dt = time.monotonic() - self._last
+        return self.record(step, dt)
+
+    def record(self, step: int, step_time: float) -> Optional[StragglerEvent]:
+        self.times.append(step_time)
+        hist = self.times[-self.window:]
+        if len(hist) < 5:
+            return None
+        med = statistics.median(hist[:-1])
+        ratio = step_time / max(med, 1e-9)
+        if ratio >= self.threshold:
+            self._consecutive += 1
+            action = ("checkpoint_and_replace_host"
+                      if self._consecutive >= self.trip_count
+                      else "observe")
+            ev = StragglerEvent(step, step_time, med, ratio, action)
+            self.events.append(ev)
+            return ev
+        self._consecutive = 0
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_chips: int
+    new_chips: int
+    new_mesh_shape: tuple
+    new_axes: tuple
+    notes: str
+
+
+def plan_elastic(new_chips: int, model_parallel: int = 16,
+                 pod_size: int = 256) -> ElasticPlan:
+    """Pick a mesh for an arbitrary surviving-chip count.
+
+    Policy: keep TP fixed (model quality/latency invariant), scale DP;
+    round DOWN to a multiple of model_parallel; multi-pod when the count
+    exceeds one pod.  Because gradient reduction uses exact integer
+    limbs (core/exact_accum), changing the DP extent preserves bitwise
+    training reproducibility for a fixed global batch.
+    """
+    usable = (new_chips // model_parallel) * model_parallel
+    if usable == 0:
+        raise ValueError(f"need at least {model_parallel} chips")
+    data = usable // model_parallel
+    if usable > pod_size:
+        pods = usable // pod_size
+        data = pod_size // model_parallel
+        return ElasticPlan(0, usable, (pods, data, model_parallel),
+                           ("pod", "data", "model"),
+                           f"dropped {new_chips - pods * pod_size} chips")
+    return ElasticPlan(0, usable, (data, model_parallel), ("data", "model"),
+                       f"dropped {new_chips - usable} chips")

@@ -1,0 +1,83 @@
+"""AdamW with warmup-cosine schedule (self-contained; no optax).
+
+The optimizer state mirrors the param tree, so the param sharding rules
+apply verbatim to m/v (distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    grad_clip: float = 1.0
+
+
+def schedule(cfg: OptConfig, step):
+    step = step.astype(F32)
+    warm = jnp.minimum(1.0, step / max(1, cfg.warmup_steps))
+    t = jnp.clip((step - cfg.warmup_steps) /
+                 max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * (cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos)
+
+
+def init(params):
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(
+        jnp.sum(jnp.square(x.astype(F32))) for x in jax.tree.leaves(tree)))
+
+
+def update(cfg: OptConfig, grads, opt_state, params):
+    """Returns (new_params, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    c1 = 1 - b1 ** step.astype(F32)
+    c2 = 1 - b2 ** step.astype(F32)
+
+    def upd(p, g, m, v):
+        g = g.astype(F32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / c1
+        vh = v / c2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * delta).astype(p.dtype), m, v
+
+    flat = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"],
+                        is_leaf=lambda x: False)
+    # unzip the (p, m, v) tuples
+    new_params = jax.tree.map(lambda t: t[0], flat,
+                              is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda t: t[1], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda t: t[2], flat,
+                         is_leaf=lambda x: isinstance(x, tuple))
+    new_opt = {"m": new_m, "v": new_v, "step": step}
+    return new_params, new_opt, {"lr": lr, "grad_norm": gnorm}

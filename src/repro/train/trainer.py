@@ -1,0 +1,122 @@
+"""Training step construction: microbatch accumulation, exact deferred-
+carry gradient reduction (the paper's technique as a training feature),
+and optional int8 error-feedback gradient compression.
+
+Gradient-reduction modes:
+  "mean"  : plain f32 accumulation (baseline; order-DEPENDENT bits).
+  "exact" : every microbatch gradient is quantized to DoT digit planes and
+            accumulated with carry-free integer adds (core/exact_accum);
+            one carry resolve + decode at the end.  Bitwise invariant to
+            microbatch order AND count for a fixed global batch -- with
+            the integer psum in distributed/collectives.py this extends to
+            replica count, the property that makes elastic re-scaling
+            bit-reproducible.
+  "int8_ef": int8-quantized gradients with error feedback (bandwidth
+            optimization for the collective-bound regime; see
+            distributed/collectives.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import exact_accum as EA
+from repro.train import optimizer as OPT
+
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainerConfig:
+    opt: OPT.OptConfig = OPT.OptConfig()
+    microbatches: int = 1
+    grad_reduce: str = "mean"           # mean | exact | int8_ef
+    accum: EA.ExactAccumConfig = EA.ExactAccumConfig()
+
+
+def _split_microbatches(batch, k: int):
+    def sp(x):
+        b = x.shape[0]
+        assert b % k == 0, f"batch {b} not divisible by microbatches {k}"
+        return x.reshape(k, b // k, *x.shape[1:])
+    return jax.tree.map(sp, batch)
+
+
+def make_train_step(model, tcfg: TrainerConfig):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    k = tcfg.microbatches
+
+    def grads_of(params, mb):
+        (loss, metrics), grads = jax.value_and_grad(
+            model.loss, has_aux=True)(params, mb)
+        return loss, metrics, grads
+
+    def accumulate_grads(params, batch):
+        if k == 1:
+            return grads_of(params, batch)
+        mbs = _split_microbatches(batch, k)
+
+        if tcfg.grad_reduce == "exact":
+            # deferred-carry integer accumulation (order-invariant);
+            # grads mirror the param tree, so params are the shape template
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape + (tcfg.accum.num_limbs,),
+                                    jnp.uint32), params)
+
+            def body(carry, mb):
+                acc, loss_sum = carry
+                loss, _, g = grads_of(params, mb)
+                enc = jax.tree.map(lambda x: EA.encode(x, tcfg.accum), g)
+                acc = jax.tree.map(EA.accumulate, acc, enc)
+                return (acc, loss_sum + loss), None
+
+            (acc, loss_sum), _ = jax.lax.scan(
+                body, (acc0, jnp.zeros((), F32)), mbs)
+            grads = jax.tree.map(
+                lambda d: EA.decode(EA.normalize(d, tcfg.accum), tcfg.accum)
+                / k, acc)
+            return loss_sum / k, {}, grads
+
+        def body(carry, mb):
+            loss_sum, g_acc = carry
+            loss, _, g = grads_of(params, mb)
+            g_acc = jax.tree.map(
+                lambda a, x: a + x.astype(F32), g_acc, g)
+            return (loss_sum + loss, g_acc), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, F32), params)
+        (loss_sum, g_acc), _ = jax.lax.scan(
+            body, (jnp.zeros((), F32), g0), mbs)
+        grads = jax.tree.map(lambda g: g / k, g_acc)
+        return loss_sum / k, {}, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = accumulate_grads(params, batch)
+        params, opt_state, om = OPT.update(tcfg.opt, grads, opt_state, params)
+        return params, opt_state, {"loss": loss, **metrics, **om}
+
+    return train_step
+
+
+def train_loop(model, tcfg: TrainerConfig, data, steps: int,
+               params=None, opt_state=None, callbacks=(),
+               key=None):
+    """Single-host training driver (examples + tests; launch/train.py is
+    the production entry with mesh/sharding/checkpointing)."""
+    key = key if key is not None else jax.random.key(0)
+    params = params if params is not None else model.init(key)
+    opt_state = opt_state if opt_state is not None else OPT.init(params)
+    step_fn = jax.jit(make_train_step(model, tcfg))
+    history = []
+    for step in range(steps):
+        batch = jax.tree.map(jnp.asarray, data.batch(step))
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        history.append({k: float(v) for k, v in metrics.items()})
+        for cb in callbacks:
+            cb(step, params, opt_state, history[-1])
+    return params, opt_state, history

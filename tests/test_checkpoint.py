@@ -1,0 +1,96 @@
+"""Checkpoint/restore, integrity (CRC + RSA), restart fallback, straggler
+monitor, elastic planning."""
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.train import checkpoint as C
+from repro.train import fault_tolerance as FT
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {
+        "params": {"w": jax.random.normal(k, (8, 16)),
+                   "b": jnp.arange(16, dtype=jnp.float32)},
+        "opt": {"m": jnp.zeros((8, 16)), "step": jnp.int32(7)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    st = _state()
+    C.save(tmp_path, 10, st)
+    back, manifest = C.restore(tmp_path / "step_000000010", st)
+    assert manifest["step"] == 10
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_corruption_detected_and_fallback(tmp_path):
+    st = _state()
+    C.save(tmp_path, 1, st)
+    C.save(tmp_path, 2, st)
+    # corrupt latest: flip bytes in one array
+    target = tmp_path / "step_000000002" / "arr_00000.npy"
+    raw = bytearray(target.read_bytes())
+    raw[-8] ^= 0xFF
+    target.write_bytes(bytes(raw))
+    with pytest.raises(C.CheckpointError):
+        C.validate(tmp_path / "step_000000002")
+    rm = FT.RestartManager(tmp_path)
+    assert rm.latest_valid_step() == 1
+    step, back = rm.resume(st)
+    assert step == 1
+
+
+def test_signature_tamper_detected(tmp_path):
+    st = _state()
+    C.save(tmp_path, 3, st)
+    mf = tmp_path / "step_000000003" / "manifest.json"
+    m = json.loads(mf.read_text())
+    m["extra"]["evil"] = True      # mutate signed content
+    mf.write_text(json.dumps(m))
+    with pytest.raises(C.CheckpointError):
+        C.validate(tmp_path / "step_000000003")
+
+
+def test_keep_last_prunes(tmp_path):
+    st = _state()
+    for s in range(6):
+        C.save(tmp_path, s, st, keep_last=2)
+    assert C.list_steps(tmp_path) == [4, 5]
+
+
+def test_async_saver(tmp_path):
+    st = _state()
+    sv = C.AsyncSaver(tmp_path, keep_last=2)
+    sv.save(1, st)
+    sv.save(2, st)
+    sv.wait()
+    assert C.list_steps(tmp_path) == [1, 2]
+
+
+def test_straggler_monitor():
+    mon = FT.StragglerMonitor(window=20, threshold=2.0, trip_count=2)
+    for i in range(10):
+        assert mon.record(i, 1.0) is None
+    ev = mon.record(10, 3.0)
+    assert ev is not None and ev.action == "observe"
+    ev = mon.record(11, 3.5)
+    assert ev is not None and ev.action == "checkpoint_and_replace_host"
+    assert mon.record(12, 1.0) is None   # recovery resets the trip counter
+
+
+def test_elastic_plan():
+    p = FT.plan_elastic(256)
+    assert p.new_mesh_shape == (16, 16)
+    p = FT.plan_elastic(250)   # lost 6 chips -> round down, keep TP
+    assert p.new_mesh_shape == (15, 16)
+    p = FT.plan_elastic(512)
+    assert p.new_mesh_shape == (2, 16, 16)
+    with pytest.raises(ValueError):
+        FT.plan_elastic(3)

@@ -1,0 +1,74 @@
+"""Validate the multi-pod dry-run artifacts (deliverable e/g).
+
+Skipped when experiments/dryrun is absent (fresh clone); after
+`python -m repro.launch.dryrun --all` this asserts:
+  * every (arch x applicable shape) cell compiled OK on BOTH meshes,
+  * segment-split variants exist for the roofline correction,
+  * per-chip argument bytes fit v5e HBM (16 GB),
+  * roofline terms are computable for every single-pod cell.
+"""
+import json
+import pathlib
+
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import applicable_shapes
+
+DRY = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+pytestmark = pytest.mark.skipif(
+    not DRY.exists() or not any(DRY.glob("*.json")),
+    reason="dry-run artifacts not generated (run repro.launch.dryrun --all)")
+
+
+def _load(arch, shape, mesh, variant):
+    p = DRY / f"{arch}.{shape}.{mesh}.{variant}.json"
+    assert p.exists(), f"missing dry-run cell {p.name}"
+    rec = json.loads(p.read_text())
+    assert rec.get("ok"), f"{p.name} failed: {rec.get('error')}"
+    return rec
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_all_cells_compiled_on_both_meshes(arch):
+    cfg = get_config(arch)
+    for shape in applicable_shapes(cfg):
+        single = _load(arch, shape.name, "single", "base")
+        multi = _load(arch, shape.name, "multi", "base")
+        assert single["cost"]["flops"] > 0
+        assert multi["cost"]["flops"] > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_split_variants_exist_for_roofline(arch):
+    cfg = get_config(arch)
+    variants = (["split_enc", "split_dec"] if cfg.family == "audio"
+                else ["split"])
+    for shape in applicable_shapes(cfg):
+        for v in variants:
+            _load(arch, shape.name, "single", v)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_argument_bytes_fit_hbm(arch):
+    cfg = get_config(arch)
+    budget = 16 * 2 ** 30   # v5e HBM per chip
+    for shape in applicable_shapes(cfg):
+        rec = _load(arch, shape.name, "single", "base")
+        args = rec["memory"]["argument_bytes"]
+        assert args < budget, (
+            f"{arch}/{shape.name}: {args / 2**30:.1f} GB args > 16 GB HBM")
+
+
+def test_roofline_terms_computable():
+    from repro.launch import roofline as R
+    n = 0
+    for p in sorted(DRY.glob("*.single.base.json")):
+        arch, shape = p.name.split(".")[:2]
+        c = R.corrected_cell(DRY, arch, shape, "single")
+        assert c is not None
+        assert c["t_compute"] > 0 and c["t_memory"] > 0
+        assert c["dominant"] in ("compute", "memory", "collective")
+        n += 1
+    assert n >= 32, f"expected >=32 single-pod cells, found {n}"

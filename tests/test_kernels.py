@@ -1,0 +1,101 @@
+"""Per-kernel correctness: Pallas (interpret mode on CPU) vs the pure-jnp
+oracle (ref.py), swept over shapes; oracles themselves are tested against
+Python-int ground truth elsewhere."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import exact_accum as EA
+from repro.core import limbs as L
+from repro.kernels.dot_add import ops as add_ops
+from repro.kernels.dot_add import ref as add_ref
+from repro.kernels.dot_mul import ops as mul_ops
+from repro.kernels.dot_mul import ref as mul_ref
+from repro.kernels.exact_accum import ops as ea_ops
+from repro.kernels.exact_accum import ref as ea_ref
+
+RNG = np.random.default_rng(3)
+
+
+def _rand_limbs(batch, m):
+    return RNG.integers(0, 1 << 32, (batch, m), dtype=np.uint64).astype(np.uint32)
+
+
+@pytest.mark.parametrize("batch", [1, 7, 64, 300])
+@pytest.mark.parametrize("m", [2, 8, 16, 64])
+def test_dot_add_kernel_sweep(batch, m):
+    a, b = _rand_limbs(batch, m), _rand_limbs(batch, m)
+    s, c = add_ops.dot_add(a, b)
+    s_r, c_r = add_ref.dot_add_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c_r))
+
+
+@pytest.mark.parametrize("batch", [1, 33])
+@pytest.mark.parametrize("m", [4, 16])
+def test_dot_sub_kernel_sweep(batch, m):
+    a, b = _rand_limbs(batch, m), _rand_limbs(batch, m)
+    s, c = add_ops.dot_sub(a, b)
+    s_r, c_r = add_ref.dot_sub_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_r))
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(c_r))
+
+
+def test_dot_add_kernel_pathological():
+    m = 16
+    pairs = L.pathological_pairs(32 * m)
+    a = L.ints_to_batch([p[0] for p in pairs], m)
+    b = L.ints_to_batch([p[1] for p in pairs], m)
+    s, c = add_ops.dot_add(a, b)
+    for i, (x, y) in enumerate(pairs):
+        got = L.limbs_to_int(np.asarray(s)[i]) + (int(np.asarray(c)[i]) << (32 * m))
+        assert got == x + y
+
+
+@pytest.mark.parametrize("batch", [1, 5, 40])
+@pytest.mark.parametrize("nbits", [128, 256, 512])
+def test_dot_mul_kernel_sweep(batch, nbits):
+    m = nbits // 32
+    a, b = _rand_limbs(batch, m), _rand_limbs(batch, m)
+    p = mul_ops.dot_mul_limbs32(a, b)
+    p_r = mul_ref.dot_mul_limbs32_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(p_r))
+    # spot-check vs python ints
+    x = L.limbs_to_int(a[0])
+    y = L.limbs_to_int(b[0])
+    assert L.limbs_to_int(np.asarray(p)[0]) == x * y
+
+
+def test_dot_mul_kernel_pathological():
+    nbits = 256
+    m = nbits // 32
+    pairs = L.pathological_pairs(nbits)
+    a = L.ints_to_batch([p[0] for p in pairs], m)
+    b = L.ints_to_batch([p[1] for p in pairs], m)
+    p = np.asarray(mul_ops.dot_mul_limbs32(a, b))
+    for i, (x, y) in enumerate(pairs):
+        assert L.limbs_to_int(p[i]) == x * y
+
+
+@pytest.mark.parametrize("shape", [(17,), (64, 33), (256,), (1000,)])
+def test_exact_accum_encode_finalize(shape):
+    x = RNG.standard_normal(shape).astype(np.float32)
+    d = ea_ops.encode(jnp.asarray(x))
+    d_r = ea_ref.encode_ref(jnp.asarray(x))
+    np.testing.assert_array_equal(np.asarray(d), np.asarray(d_r))
+    y = ea_ops.finalize(d, shape=shape)
+    y_r = ea_ref.finalize_ref(d_r, shape=shape)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(y_r))
+    # quantization bound
+    np.testing.assert_allclose(np.asarray(y), x, atol=2.0 ** -24)
+
+
+def test_exact_accum_kernel_accumulate_matches_core():
+    xs = RNG.standard_normal((20, 128)).astype(np.float32)
+    acc = ea_ops.encode(jnp.asarray(xs[0]))
+    for i in range(1, 20):
+        acc = ea_ops.accumulate(acc, ea_ops.encode(jnp.asarray(xs[i])))
+    y = np.asarray(ea_ops.finalize(acc, shape=(128,)))
+    want = np.asarray(EA.exact_reduce(jnp.asarray(xs), 1))
+    np.testing.assert_array_equal(y, want)

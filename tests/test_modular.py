@@ -1,0 +1,91 @@
+"""Montgomery arithmetic / modexp / RSA / pi vs Python-int oracles."""
+import jax
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import limbs as L
+from repro.core import modular as M
+from repro.core import rsa as R
+
+RNG = np.random.default_rng(11)
+
+
+@pytest.mark.parametrize("nbits", [64, 256, 512])
+def test_mont_mul_random(nbits):
+    n = None
+    while n is None or n % 2 == 0:
+        n = L.random_bigints(RNG, 1, nbits)[0] | (1 << (nbits - 1)) | 1
+    ctx = M.mont_setup(n, nbits)
+    xs = [v % n for v in L.random_bigints(RNG, 8, nbits)]
+    ys = [v % n for v in L.random_bigints(RNG, 8, nbits)]
+    a = jnp.asarray(np.stack([L.int_to_limbs(x, ctx.m, 16) for x in xs]))
+    b = jnp.asarray(np.stack([L.int_to_limbs(y, ctx.m, 16) for y in ys]))
+    out = np.asarray(M.mod_mul(a, b, ctx))
+    for i, (x, y) in enumerate(zip(xs, ys)):
+        assert L.limbs_to_int(out[i], 16) == (x * y) % n
+
+
+@pytest.mark.parametrize("nbits,ebits", [(64, 16), (256, 64)])
+def test_mod_exp_random(nbits, ebits):
+    n = L.random_bigints(RNG, 1, nbits)[0] | (1 << (nbits - 1)) | 1
+    ctx = M.mont_setup(n, nbits)
+    e = L.random_bigints(RNG, 1, ebits)[0] | 1
+    xs = [v % n for v in L.random_bigints(RNG, 4, nbits)]
+    a = jnp.asarray(np.stack([L.int_to_limbs(x, ctx.m, 16) for x in xs]))
+    out = np.asarray(M.mod_exp(a, jnp.asarray(M.exp_bits_msb(e)), ctx))
+    for i, x in enumerate(xs):
+        assert L.limbs_to_int(out[i], 16) == pow(x, e, n)
+
+
+def test_rsa_sign_verify_roundtrip():
+    key = R.generate_key(bits=256, seed=5)
+    msgs = [R.digest_int(f"msg{i}".encode(), key.bits) for i in range(4)]
+    md = R.messages_to_digits(msgs, key)
+    sigs = R.sign(md, key)
+    back = np.asarray(R.verify(sigs, key))
+    for i, m in enumerate(msgs):
+        assert L.limbs_to_int(back[i], 16) == m % key.n
+    # oracle: python pow
+    s0 = L.limbs_to_int(np.asarray(sigs)[0], 16)
+    assert s0 == pow(msgs[0] % key.n, key.d, key.n)
+
+
+def test_pi_digits():
+    from repro.core import pi as P
+    got = P.pi_digits(50)
+    want = P.pi_reference(50)
+    assert got[:40] == want[:40], f"{got} vs {want}"
+    assert want.startswith("3.14159265358979")
+
+
+def test_gcd_batched():
+    import math
+    from repro.core import gcd as G
+    rng = np.random.default_rng(21)
+    nbits = 256
+    nd = nbits // 16
+    xs = L.random_bigints(rng, 8, nbits)
+    ys = L.random_bigints(rng, 8, nbits)
+    # plant common factors in half the lanes
+    for i in range(0, 8, 2):
+        g = L.random_bigints(rng, 1, 64)[0] | 1
+        xs[i] = (xs[i] // g) * g if xs[i] >= g else g
+        ys[i] = (ys[i] // g) * g if ys[i] >= g else g
+    u = jnp.asarray(np.stack([L.int_to_limbs(x, nd, 16) for x in xs]))
+    v = jnp.asarray(np.stack([L.int_to_limbs(y, nd, 16) for y in ys]))
+    out = np.asarray(jax.jit(G.gcd)(u, v))
+    for i in range(8):
+        assert L.limbs_to_int(out[i], 16) == math.gcd(xs[i], ys[i]), i
+
+
+def test_gcd_edge_cases():
+    import math
+    from repro.core import gcd as G
+    nd = 8
+    cases = [(12, 18), (1, 1), (0, 5), (7, 0), (2**96, 2**64), (17, 17)]
+    u = jnp.asarray(np.stack([L.int_to_limbs(a, nd, 16) for a, _ in cases]))
+    v = jnp.asarray(np.stack([L.int_to_limbs(b, nd, 16) for _, b in cases]))
+    out = np.asarray(G.gcd(u, v))
+    for i, (a, b) in enumerate(cases):
+        assert L.limbs_to_int(out[i], 16) == math.gcd(a, b), (i, a, b)

@@ -1,0 +1,114 @@
+"""DoT multiplication (all paths) vs the Python-int oracle."""
+import numpy as np
+import pytest
+
+from repro.core import limbs as L
+import repro.core.mul as M
+
+RNG = np.random.default_rng(1)
+
+
+def _digits(xs, nd, bits=16):
+    return np.stack([L.int_to_limbs(x, nd, bits) for x in xs])
+
+
+def _check_product_digits(p, xs, ys, bits):
+    p = np.asarray(p)
+    for i, (x, y) in enumerate(zip(xs, ys)):
+        got = L.limbs_to_int(p[i], bits)
+        assert got == x * y, f"idx {i}: {x}*{y} got {got}"
+
+
+@pytest.mark.parametrize("nbits", [64, 128, 256, 512])
+def test_dot_mul_random(nbits):
+    nd = nbits // 16
+    xs = L.random_bigints(RNG, 8, nbits)
+    ys = L.random_bigints(RNG, 8, nbits)
+    p = M.dot_mul(_digits(xs, nd), _digits(ys, nd))
+    assert p.shape[-1] == 2 * nd
+    _check_product_digits(p, xs, ys, 16)
+
+
+def test_dot_mul_pathological():
+    nbits = 256
+    nd = nbits // 16
+    pairs = L.pathological_pairs(nbits, bits=16)
+    xs = [p[0] for p in pairs]
+    ys = [p[1] for p in pairs]
+    p = M.dot_mul(_digits(xs, nd), _digits(ys, nd))
+    _check_product_digits(p, xs, ys, 16)
+
+
+def test_dot_mul_scan_normalize_matches():
+    nbits = 256
+    nd = nbits // 16
+    xs = L.random_bigints(RNG, 4, nbits)
+    ys = L.random_bigints(RNG, 4, nbits)
+    p1 = M.dot_mul(_digits(xs, nd), _digits(ys, nd), normalize="dot")
+    p2 = M.dot_mul(_digits(xs, nd), _digits(ys, nd), normalize="scan")
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+@pytest.mark.parametrize("nbits", [128, 256, 448])
+def test_dot_mul_mxu(nbits):
+    nd = -(-nbits // 7)
+    xs = L.random_bigints(RNG, 8, nbits)
+    ys = L.random_bigints(RNG, 8, nbits)
+    a = np.stack([L.int_to_limbs(x, nd, 7, np.int8) for x in xs])
+    b = np.stack([L.int_to_limbs(y, nd, 7, np.int8) for y in ys])
+    p = M.dot_mul_mxu(a, b)
+    _check_product_digits(p, xs, ys, 7)
+
+
+@pytest.mark.parametrize("nbits", [128, 256])
+def test_mul_schoolbook(nbits):
+    nd = nbits // 16
+    xs = L.random_bigints(RNG, 8, nbits)
+    ys = L.random_bigints(RNG, 8, nbits)
+    p = M.mul_schoolbook(_digits(xs, nd), _digits(ys, nd))
+    _check_product_digits(p, xs, ys, 16)
+
+
+@pytest.mark.parametrize("nbits", [512, 1024, 1536])
+def test_mul_karatsuba(nbits):
+    nd = nbits // 16
+    xs = L.random_bigints(RNG, 4, nbits)
+    ys = L.random_bigints(RNG, 4, nbits)
+    p = M.mul_karatsuba(_digits(xs, nd), _digits(ys, nd), threshold=8)
+    _check_product_digits(p[..., : 2 * nd], xs, ys, 16)
+
+
+def test_mul_karatsuba_pathological():
+    nbits = 512
+    nd = nbits // 16
+    pairs = L.pathological_pairs(nbits, bits=16)
+    xs = [p[0] for p in pairs]
+    ys = [p[1] for p in pairs]
+    p = M.mul_karatsuba(_digits(xs, nd), _digits(ys, nd), threshold=8)
+    _check_product_digits(p[..., : 2 * nd], xs, ys, 16)
+
+
+@pytest.mark.parametrize("method", ["dot", "mxu", "schoolbook", "karatsuba", "auto"])
+@pytest.mark.parametrize("nbits", [256, 1024])
+def test_mul_limbs32_roundtrip(method, nbits):
+    m = nbits // 32
+    xs = L.random_bigints(RNG, 4, nbits)
+    ys = L.random_bigints(RNG, 4, nbits)
+    a = L.ints_to_batch(xs, m)
+    b = L.ints_to_batch(ys, m)
+    p = M.mul_limbs32(a, b, method=method)
+    p = np.asarray(p)
+    for i, (x, y) in enumerate(zip(xs, ys)):
+        assert L.limbs_to_int(p[i], 32) == x * y
+
+
+def test_split_join_digits_roundtrip():
+    m = 8
+    xs = L.random_bigints(RNG, 8, 32 * m)
+    a = L.ints_to_batch(xs, m)
+    for bits in (7, 13, 16, 26):
+        d = M.split_digits(a, bits)
+        for i, x in enumerate(xs):
+            assert L.limbs_to_int(np.asarray(d)[i], bits) == x
+        back = M.join_digits(d, bits, m)
+        np.testing.assert_array_equal(np.asarray(back), a)

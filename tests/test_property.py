@@ -1,0 +1,91 @@
+"""Hypothesis property-based tests on the system's core invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+import repro.core.add as A
+import repro.core.mul as M
+from repro.core import exact_accum as EA
+from repro.core import limbs as L
+
+SET = settings(max_examples=40, deadline=None)
+
+
+def bigint(nbits):
+    return st.integers(min_value=0, max_value=(1 << nbits) - 1)
+
+
+@given(st.integers(1, 12).flatmap(
+    lambda m: st.tuples(st.just(m), bigint(32 * m), bigint(32 * m))))
+@SET
+def test_dot_add_matches_python(args):
+    m, x, y = args
+    a = L.ints_to_batch([x], m)
+    b = L.ints_to_batch([y], m)
+    s, c = A.dot_add(a, b)
+    assert L.limbs_to_int(np.asarray(s)[0]) + (int(np.asarray(c)[0]) << (32 * m)) == x + y
+
+
+@given(st.integers(1, 12).flatmap(
+    lambda m: st.tuples(st.just(m), bigint(32 * m), bigint(32 * m))))
+@SET
+def test_dot_sub_matches_python(args):
+    m, x, y = args
+    a = L.ints_to_batch([x], m)
+    b = L.ints_to_batch([y], m)
+    d, bo = A.dot_sub(a, b)
+    assert L.limbs_to_int(np.asarray(d)[0]) == (x - y) % (1 << (32 * m))
+    assert int(np.asarray(bo)[0]) == (1 if x < y else 0)
+
+
+@given(st.integers(1, 8).flatmap(
+    lambda m: st.tuples(st.just(m), bigint(32 * m), bigint(32 * m))))
+@SET
+def test_mul_matches_python(args):
+    m, x, y = args
+    a = L.ints_to_batch([x], m)
+    b = L.ints_to_batch([y], m)
+    p = M.mul_limbs32(a, b, method="dot")
+    assert L.limbs_to_int(np.asarray(p)[0]) == x * y
+
+
+@given(st.integers(1, 6).flatmap(
+    lambda m: st.tuples(st.just(m), bigint(32 * m), bigint(32 * m), bigint(32 * m))))
+@SET
+def test_mul_distributes_over_add(args):
+    """(x + y) * z == x*z + y*z  -- ring axioms survive the limb domain."""
+    m, x, y, z = args
+    mod = 1 << (64 * m)
+    a = L.ints_to_batch([(x + y) % (1 << (32 * m))], m)
+    zz = L.ints_to_batch([z], m)
+    lhs = L.limbs_to_int(np.asarray(M.mul_limbs32(a, zz))[0])
+    want = (((x + y) % (1 << (32 * m))) * z) % mod
+    assert lhs == want
+
+
+@given(st.lists(st.floats(-32, 32, allow_nan=False, width=32),
+                min_size=2, max_size=48),
+       st.randoms(use_true_random=False))
+@SET
+def test_exact_accum_order_invariance(vals, rnd):
+    """Sum of encoded values is bitwise identical under any permutation."""
+    x = np.array(vals, np.float32)
+    perm = list(range(len(x)))
+    rnd.shuffle(perm)
+    d1 = EA.encode(jnp.asarray(x)).sum(axis=0)
+    d2 = EA.encode(jnp.asarray(x[perm])).sum(axis=0)
+    y1 = np.asarray(EA.decode(EA.normalize(d1), EA.DEFAULT))
+    y2 = np.asarray(EA.decode(EA.normalize(d2), EA.DEFAULT))
+    assert y1.tobytes() == y2.tobytes()
+
+
+@given(st.integers(2, 10).flatmap(
+    lambda m: st.tuples(st.just(m), bigint(16 * m))))
+@SET
+def test_split_join_roundtrip(args):
+    m, x = args
+    a = L.ints_to_batch([x], m)
+    for bits in (7, 11, 16):
+        d = M.split_digits(jnp.asarray(a), bits)
+        back = M.join_digits(d, bits, m)
+        np.testing.assert_array_equal(np.asarray(back), a)
