@@ -1,9 +1,14 @@
 """Paper Fig. 5 + appendix latency CDFs (OpenSSL speed): batched RSA
 sign/verify and DH-style fixed-base modexp throughput + latency
-percentiles across key sizes.
+percentiles across key sizes, reported head-to-head for the jnp and
+pallas (fused VMEM-resident Montgomery kernel) backends.
+
+``--smoke`` (or run(smoke=True)) shrinks to one tiny key and 2 reps so
+CI can exercise the full code path in seconds.
 """
 from __future__ import annotations
 
+import argparse
 import time
 
 import jax
@@ -14,6 +19,8 @@ from repro.core import limbs as L
 from repro.core import modular as MOD
 from repro.core import rsa as RSA
 from benchmarks.util import row
+
+BACKENDS = ("jnp", "pallas")
 
 
 def _latency_percentiles(fn, arg, iters=12):
@@ -27,41 +34,54 @@ def _latency_percentiles(fn, arg, iters=12):
     return (np.percentile(ts, 50), np.percentile(ts, 95))
 
 
-def run(full: bool = False):
+def run(full: bool = False, smoke: bool = False):
     out = []
-    sizes = (256, 512) if not full else (256, 512, 1024)
-    batch = 32
+    if smoke:
+        sizes, batch, iters = (128,), 4, 2
+    elif full:
+        sizes, batch, iters = (256, 512, 1024), 32, 12
+    else:
+        sizes, batch, iters = (256, 512), 32, 12
     for bits in sizes:
         key = RSA.generate_key(bits=bits, seed=bits)
         msgs = [RSA.digest_int(f"m{i}".encode(), bits) for i in range(batch)]
         md = RSA.messages_to_digits(msgs, key)
-        sign = jax.jit(lambda x, k=key: RSA.sign(x, k))
-        verify = jax.jit(lambda x, k=key: RSA.verify(x, k))
-        p50, p95 = _latency_percentiles(sign, md)
-        out.append(row(f"crypto/rsa{bits}/sign", p50 / batch,
-                       f"p50_ms={p50 * 1e3:.1f} p95_ms={p95 * 1e3:.1f} "
-                       f"ops_s={batch / p50:.1f}"))
-        sigs = sign(md)
-        p50, p95 = _latency_percentiles(verify, sigs)
-        out.append(row(f"crypto/rsa{bits}/verify", p50 / batch,
-                       f"p50_ms={p50 * 1e3:.1f} ops_s={batch / p50:.1f}"))
+        for be in BACKENDS:
+            sign = jax.jit(lambda x, k=key, b=be: RSA.sign(x, k, backend=b))
+            verify = jax.jit(lambda x, k=key, b=be: RSA.verify(x, k, backend=b))
+            p50, p95 = _latency_percentiles(sign, md, iters)
+            out.append(row(f"crypto/rsa{bits}/sign/{be}", p50 / batch,
+                           f"p50_ms={p50 * 1e3:.1f} p95_ms={p95 * 1e3:.1f} "
+                           f"ops_s={batch / p50:.1f}"))
+            sigs = sign(md)
+            p50, p95 = _latency_percentiles(verify, sigs, iters)
+            out.append(row(f"crypto/rsa{bits}/verify/{be}", p50 / batch,
+                           f"p50_ms={p50 * 1e3:.1f} ops_s={batch / p50:.1f}"))
 
-    # FFDH-style: fixed generator g=2, random 256-bit exponents, 512-bit p
+    # FFDH-style: fixed generator g=2, random exponents, odd prime-sized p
     rng = np.random.default_rng(7)
-    nbits = 512
+    nbits = 128 if smoke else 512
+    ebits = 64 if smoke else 256
     p = L.random_bigints(rng, 1, nbits)[0] | (1 << (nbits - 1)) | 1
     ctx = MOD.mont_setup(p, nbits)
     g = jnp.asarray(np.stack([L.int_to_limbs(2, ctx.m, 16)] * batch))
-    exps = np.stack([MOD.exp_bits_msb(e | (1 << 255), 256)
-                     for e in L.random_bigints(rng, batch, 256)])
-    derive = jax.jit(lambda b, e: MOD.mod_exp(b, e, ctx))
-    p50, p95 = _latency_percentiles(lambda a: derive(a, jnp.asarray(exps)), g)
-    out.append(row(f"crypto/ffdh{nbits}/derive", p50 / batch,
-                   f"p50_ms={p50 * 1e3:.1f} p95_ms={p95 * 1e3:.1f} "
-                   f"ops_s={batch / p50:.1f}"))
+    exps = np.stack([MOD.exp_bits_msb(e | (1 << (ebits - 1)), ebits)
+                     for e in L.random_bigints(rng, batch, ebits)])
+    for be in BACKENDS:
+        derive = jax.jit(
+            lambda b, e, k=be: MOD.mod_exp(b, e, ctx, backend=k))
+        p50, p95 = _latency_percentiles(
+            lambda a: derive(a, jnp.asarray(exps)), g, iters)
+        out.append(row(f"crypto/ffdh{nbits}/derive/{be}", p50 / batch,
+                       f"p50_ms={p50 * 1e3:.1f} p95_ms={p95 * 1e3:.1f} "
+                       f"ops_s={batch / p50:.1f}"))
     return out
 
 
 if __name__ == "__main__":
-    for r in run():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for r in run(full=args.full, smoke=args.smoke):
         print(r)

@@ -11,7 +11,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-import repro.core.add as A
 import repro.core.mul as M
 from repro.core import limbs as L
 from repro.core import modular as MOD

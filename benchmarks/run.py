@@ -9,9 +9,12 @@
   bench_roofline    -> EXPERIMENTS.md SSRoofline (TPU terms from the dry-run)
 
 Prints ``name,us_per_call,derived`` CSV.  ``--full`` widens the operand
-grid (slower).  Individual suites: ``python -m benchmarks.bench_add``.
+grid (slower); ``--smoke`` shrinks suites that support it to tiny sizes
+and 1-2 reps (the CI bitrot guard).  Individual suites:
+``python -m benchmarks.bench_add``.
 """
 import argparse
+import inspect
 import sys
 import time
 import traceback
@@ -20,6 +23,7 @@ import traceback
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names (e.g. add,mul)")
     args = ap.parse_args()
@@ -38,8 +42,11 @@ def main() -> None:
     for name in pick:
         mod = suites[name]
         t0 = time.time()
+        kwargs = {"full": args.full}
+        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+            kwargs["smoke"] = True
         try:
-            for line in mod.run(full=args.full):
+            for line in mod.run(**kwargs):
                 print(line, flush=True)
             print(f"# suite {name}: {time.time() - t0:.1f}s", flush=True)
         except Exception:  # noqa: BLE001 - report and continue

@@ -18,7 +18,6 @@ from repro.configs import get_config
 from repro.core import exact_accum as EA
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import build_model
-from repro.train import trainer as T
 
 
 def grads_for_units(model, params, units):

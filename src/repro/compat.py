@@ -1,0 +1,35 @@
+"""Thin jax-version compatibility layer.
+
+The repo targets the stable jax API surface; on older jaxlib (0.4.x, the
+pinned toolchain here) two spellings differ:
+
+  * ``jax.shard_map`` lives at ``jax.experimental.shard_map.shard_map``
+    (keyword ``check_rep`` instead of ``check_vma``),
+  * ``Compiled.cost_analysis()`` returns a one-element list of dicts
+    instead of a dict.
+
+Everything else routes through jax directly; keep this module tiny.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """jax.shard_map with the old experimental fallback."""
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _sm
+    kwargs = {} if check_vma is None else {"check_rep": check_vma}
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               **kwargs)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Compiled.cost_analysis() as a flat dict on every jax version."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)

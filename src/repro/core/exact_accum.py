@@ -23,12 +23,9 @@ tests/test_exact_accum.py for the bitwise-invariance property tests.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 U32 = jnp.uint32
 I32 = jnp.int32

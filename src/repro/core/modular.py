@@ -15,12 +15,24 @@ Lazy-digit overflow analysis (why no per-iteration normalization):
 Exponentiation is constant-time square-and-multiply (both branches
 computed, select by bit) -- matching how crypto libraries avoid key-
 dependent timing.
+
+Backend dispatch
+----------------
+Every public op takes ``backend`` (default: the module default, "jnp"):
+
+  * ``reference`` -- host-side Python-int oracle (exact, slow; the
+    ground truth every other backend is tested against),
+  * ``jnp``       -- the pure-jnp formulation below (HBM round-trips the
+    accumulator every CIOS scan step),
+  * ``pallas``    -- the fused VMEM-resident kernel in
+    kernels/dot_modmul (interpret mode on CPU, tiled on TPU).
+
+core/rsa.py, examples/rsa_crypto.py and benchmarks/bench_crypto.py all
+route through this one API, so backends can be compared head-to-head.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -33,6 +45,28 @@ U32 = jnp.uint32
 DIGIT_BITS = 16
 BASE = 1 << DIGIT_BITS
 MASK = jnp.uint32(BASE - 1)
+
+BACKENDS = ("reference", "jnp", "pallas")
+_DEFAULT_BACKEND = "jnp"
+
+
+def set_default_backend(name: str) -> None:
+    """Set the module-wide default backend for all modular ops."""
+    global _DEFAULT_BACKEND
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; choose from {BACKENDS}")
+    _DEFAULT_BACKEND = name
+
+
+def get_default_backend() -> str:
+    return _DEFAULT_BACKEND
+
+
+def _resolve_backend(backend: str | None) -> str:
+    backend = backend or _DEFAULT_BACKEND
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+    return backend
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,9 +123,15 @@ def _sub_mod(a: jax.Array, n_dig: jax.Array) -> jax.Array:
     return t
 
 
-def mont_mul(a: jax.Array, b: jax.Array, ctx: MontCtx,
-             lazy: bool = True) -> jax.Array:
-    """CIOS Montgomery product: a*b*R^{-1} mod n.
+def _flatten_batch(x: jax.Array, m: int):
+    """(..., m) -> ((N, m), batch_shape) for the 2-D kernel entry points."""
+    batch_shape = x.shape[:-1]
+    return x.reshape((-1, m)), batch_shape
+
+
+def _mont_mul_jnp(a: jax.Array, b: jax.Array, ctx: MontCtx,
+                  lazy: bool = True) -> jax.Array:
+    """CIOS Montgomery product: a*b*R^{-1} mod n (pure-jnp backend).
 
     a, b: (..., m) normalized digits < 2**16, values < n.
     Sequential over the m digits of a (inherent to Montgomery); fully
@@ -149,29 +189,65 @@ def mont_mul(a: jax.Array, b: jax.Array, ctx: MontCtx,
     return out[..., :m]
 
 
-def to_mont(x: jax.Array, ctx: MontCtx) -> jax.Array:
-    return mont_mul(x, jnp.asarray(ctx.r2_digits, U32), ctx)
+def _mont_mul_reference(a, b, ctx: MontCtx) -> jax.Array:
+    """Host-side Python-int oracle (exact; defines correctness)."""
+    from repro.kernels.dot_modmul import ref as _ref
+    a = np.asarray(a, np.uint32)
+    b = np.asarray(b, np.uint32)
+    shape = np.broadcast_shapes(a.shape[:-1], b.shape[:-1]) + (ctx.m,)
+    a2, batch_shape = _flatten_batch(np.broadcast_to(a, shape), ctx.m)
+    b2, _ = _flatten_batch(np.broadcast_to(b, shape), ctx.m)
+    out = _ref.mont_mul_ref(a2, b2, ctx.n)
+    return jnp.asarray(out.reshape(batch_shape + (ctx.m,)))
 
 
-def from_mont(x: jax.Array, ctx: MontCtx) -> jax.Array:
-    one = jnp.zeros((ctx.m,), U32).at[0].set(1)
-    return mont_mul(x, one, ctx)
+def mont_mul(a: jax.Array, b: jax.Array, ctx: MontCtx, lazy: bool = True,
+             backend: str | None = None) -> jax.Array:
+    """CIOS Montgomery product a*b*R^{-1} mod n on (..., m) digit arrays,
+    dispatched to the selected backend (see module docstring).
 
-
-def mod_mul(a: jax.Array, b: jax.Array, ctx: MontCtx) -> jax.Array:
-    """Plain modular product (enters/leaves Montgomery form)."""
-    return from_mont(mont_mul(to_mont(a, ctx), to_mont(b, ctx), ctx), ctx)
-
-
-def mod_exp(base: jax.Array, exp_bits: jax.Array, ctx: MontCtx,
-            lazy: bool = True) -> jax.Array:
-    """base ** e mod n.
-
-    base: (..., m) digits; exp_bits: (nbits,) or (..., nbits) uint32/int32
-    bits MSB-first.  Constant-time ladder: square always, multiply always,
-    select by the exponent bit.
+    ``lazy`` applies to the jnp backend only: lazy=False is the eager
+    per-iteration-normalization measurement baseline (bench_gmp).  The
+    pallas kernel is lazy by construction; reference is exact host math.
     """
-    x = to_mont(jnp.asarray(base, U32), ctx)
+    backend = _resolve_backend(backend)
+    if backend == "jnp":
+        return _mont_mul_jnp(a, b, ctx, lazy)
+    if backend == "pallas":
+        from repro.kernels.dot_modmul import ops as _mops
+        a = jnp.asarray(a, U32)
+        b = jnp.asarray(b, U32)
+        shape = jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1]) + (ctx.m,)
+        a2, batch_shape = _flatten_batch(jnp.broadcast_to(a, shape), ctx.m)
+        b2, _ = _flatten_batch(jnp.broadcast_to(b, shape), ctx.m)
+        out = _mops.dot_mont_mul(a2, b2, ctx)
+        return out.reshape(batch_shape + (ctx.m,))
+    return _mont_mul_reference(a, b, ctx)
+
+
+def to_mont(x: jax.Array, ctx: MontCtx,
+            backend: str | None = None) -> jax.Array:
+    return mont_mul(x, jnp.asarray(ctx.r2_digits, U32), ctx,
+                    backend=backend)
+
+
+def from_mont(x: jax.Array, ctx: MontCtx,
+              backend: str | None = None) -> jax.Array:
+    one = jnp.zeros((ctx.m,), U32).at[0].set(1)
+    return mont_mul(x, one, ctx, backend=backend)
+
+
+def mod_mul(a: jax.Array, b: jax.Array, ctx: MontCtx,
+            backend: str | None = None) -> jax.Array:
+    """Plain modular product (enters/leaves Montgomery form)."""
+    return from_mont(
+        mont_mul(to_mont(a, ctx, backend), to_mont(b, ctx, backend), ctx,
+                 backend=backend), ctx, backend)
+
+
+def _mod_exp_jnp(base: jax.Array, exp_bits: jax.Array, ctx: MontCtx,
+                 lazy: bool = True) -> jax.Array:
+    x = to_mont(jnp.asarray(base, U32), ctx, backend="jnp")
     one = jnp.asarray(ctx.one_digits, U32)
     res0 = jnp.broadcast_to(one, x.shape).astype(U32)
     eb = jnp.asarray(exp_bits, U32)
@@ -179,12 +255,61 @@ def mod_exp(base: jax.Array, exp_bits: jax.Array, ctx: MontCtx,
     eb_t = jnp.moveaxis(jnp.broadcast_to(eb, x.shape[:-1] + (nbits,)), -1, 0)
 
     def step(res, bit):
-        sq = mont_mul(res, res, ctx, lazy)
-        mul = mont_mul(sq, x, ctx, lazy)
+        sq = _mont_mul_jnp(res, res, ctx, lazy)
+        mul = _mont_mul_jnp(sq, x, ctx, lazy)
         return jnp.where((bit == 1)[..., None], mul, sq), None
 
     res, _ = jax.lax.scan(step, res0, eb_t)
-    return from_mont(res, ctx)
+    return from_mont(res, ctx, backend="jnp")
+
+
+def _bits_to_int(bits: np.ndarray) -> int:
+    e = 0
+    for v in bits:
+        e = (e << 1) | int(v)
+    return e
+
+
+def _mod_exp_reference(base, exp_bits, ctx: MontCtx) -> jax.Array:
+    from repro.kernels.dot_modmul import ref as _ref
+    base = np.asarray(base, np.uint32)
+    eb = np.asarray(exp_bits, np.uint32)
+    b2, batch_shape = _flatten_batch(base, ctx.m)
+    if eb.ndim == 1:
+        out = _ref.mod_exp_ref(b2, _bits_to_int(eb), ctx.n)
+    else:
+        eb2 = np.broadcast_to(eb, batch_shape + (eb.shape[-1],))
+        eb2 = eb2.reshape((-1, eb.shape[-1]))
+        out = np.stack(
+            [_ref.mod_exp_ref(b2[i:i + 1], _bits_to_int(eb2[i]), ctx.n)[0]
+             for i in range(b2.shape[0])])
+    return jnp.asarray(out.reshape(batch_shape + (ctx.m,)))
+
+
+def mod_exp(base: jax.Array, exp_bits: jax.Array, ctx: MontCtx,
+            lazy: bool = True, backend: str | None = None) -> jax.Array:
+    """base ** e mod n.
+
+    base: (..., m) digits; exp_bits: (nbits,) or (..., nbits) uint32/int32
+    bits MSB-first.  Constant-time ladder: square always, multiply always,
+    select by the exponent bit.  Dispatched to the selected backend; on
+    "pallas" every ladder step is two fused VMEM-resident kernel launches.
+    ``lazy`` applies to the jnp backend only (see mont_mul).
+    """
+    backend = _resolve_backend(backend)
+    if backend == "jnp":
+        return _mod_exp_jnp(base, exp_bits, ctx, lazy)
+    if backend == "pallas":
+        from repro.kernels.dot_modmul import ops as _mops
+        base = jnp.asarray(base, U32)
+        b2, batch_shape = _flatten_batch(base, ctx.m)
+        eb = jnp.asarray(exp_bits, U32)
+        if eb.ndim > 1:
+            eb = jnp.broadcast_to(
+                eb, batch_shape + (eb.shape[-1],)).reshape(-1, eb.shape[-1])
+        out = _mops.dot_mod_exp(b2, eb, ctx)
+        return out.reshape(batch_shape + (ctx.m,))
+    return _mod_exp_reference(base, exp_bits, ctx)
 
 
 def exp_bits_msb(e: int, nbits: int | None = None) -> np.ndarray:

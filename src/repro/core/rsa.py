@@ -13,7 +13,6 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -104,16 +103,20 @@ def messages_to_digits(msgs: list[int], key: RSAKey) -> jnp.ndarray:
         [L.int_to_limbs(msg % key.n, m_digits, DIGIT_BITS) for msg in msgs]))
 
 
-def sign(msg_digits: jax.Array, key: RSAKey) -> jax.Array:
+def sign(msg_digits: jax.Array, key: RSAKey,
+         backend: str | None = None) -> jax.Array:
     """s = m^d mod n, batched over leading axes."""
     bits = M.exp_bits_msb(key.d, key.n.bit_length())
-    return M.mod_exp(msg_digits, jnp.asarray(bits), key.ctx)
+    return M.mod_exp(msg_digits, jnp.asarray(bits), key.ctx,
+                     backend=backend)
 
 
-def verify(sig_digits: jax.Array, key: RSAKey) -> jax.Array:
+def verify(sig_digits: jax.Array, key: RSAKey,
+           backend: str | None = None) -> jax.Array:
     """m = s^e mod n (fast public exponent)."""
     bits = M.exp_bits_msb(key.e)
-    return M.mod_exp(sig_digits, jnp.asarray(bits), key.ctx)
+    return M.mod_exp(sig_digits, jnp.asarray(bits), key.ctx,
+                     backend=backend)
 
 
 def digest_int(data: bytes, bits: int) -> int:

@@ -20,12 +20,10 @@ All are shard_map-level primitives with subprocess-mesh tests
 """
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import exact_accum as EA
 

@@ -14,12 +14,13 @@ unpipelined stack on a subprocess mesh (tests/test_distributed.py).
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.compat import shard_map
 
 
 def pipeline_forward(stage_fn: Callable, n_stages: int, microbatches: int,
@@ -73,7 +74,7 @@ def run_pipelined(mesh: Mesh, stage_fn, stage_params_stacked, x,
     x_mb = x.reshape(microbatches, B // microbatches, *x.shape[1:])
 
     fn = pipeline_forward(stage_fn, S, microbatches, axis_name)
-    mapped = jax.shard_map(
+    mapped = shard_map(
         fn, mesh=mesh,
         in_specs=(P(axis_name), P()),      # params sharded by stage
         out_specs=P(),

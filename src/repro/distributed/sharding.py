@@ -13,7 +13,7 @@ axes instead (context-sharded KV: the production long-context layout).
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import numpy as np

@@ -16,7 +16,6 @@ Phase 4 is cheaper than divergence):
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

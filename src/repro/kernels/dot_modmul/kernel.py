@@ -1,0 +1,118 @@
+"""Fused Pallas TPU kernel for batched CIOS Montgomery multiplication.
+
+One program owns a (TB, m) block of both operands in VMEM and runs the
+FULL Montgomery product there: m CIOS iterations with lazy radix-2**16
+digits (deferred carries, per the overflow analysis in core/modular.py),
+then ONE carry-resolve pass and the branch-free conditional subtract.
+The jnp formulation in core/modular.py round-trips the (m+1)-digit
+accumulator through HBM on every scan step; here the accumulator never
+leaves vregs -- the TPU twin of the paper's "keep the redundant
+representation in registers across the whole CIOS loop" (sec 4.4, DoTSSL)
+and of Meng's vectorized-Montgomery generation.
+
+In-kernel schedule per iteration i (all VPU ops over the batch tile):
+  P1  acc += a_i * b          (lo into column j, hi into j+1 -- lazy)
+  P2  u = (acc_0 mod B) * n0p mod B
+  P3  acc += u * n            (digit 0 becomes 0 mod B)
+  P4  shift acc down one digit, folding acc_0's high part into the new
+      digit 0 (static slice -- no data movement beyond the vreg shuffle)
+After m iterations: digits < 5*m*2**16 (safe in uint32 for m <= 2**13),
+one normalize_static pass brings t < 2n to normalized digits, and the
+radix-complement subtract selects t or t - n without branching.
+
+n0p and m are BAKED into the kernel (host-side Montgomery constants --
+one specialization per modulus, exactly the serving pattern: a key is
+loaded once, then millions of modmuls reuse the compiled kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.kernels.dot_mul.kernel import normalize_static
+
+U32 = jnp.uint32
+DMASK = np.uint32(0xFFFF)
+DBITS = np.uint32(16)
+
+
+def cios_iterations(a, b, n, n0p):
+    """The lazy CIOS loop on (TB, m) blocks; returns the (TB, m+1) lazy
+    accumulator with t = a*b*R^{-1} represented in deferred-carry digits.
+
+    Unrolled over the m digits of a (the dependency chain inherent to
+    Montgomery); every line is a full-width VPU op over the batch tile.
+    """
+    tb, m = a.shape
+    n0p = np.uint32(n0p)
+    acc = jnp.zeros((tb, m + 1), U32)
+    for i in range(m):
+        prod = a[:, i:i + 1] * b                  # exact uint32 products
+        acc = acc.at[:, :m].add(prod & DMASK)
+        acc = acc.at[:, 1:m + 1].add(prod >> DBITS)
+        u = ((acc[:, 0:1] & DMASK) * n0p) & DMASK
+        prod2 = u * n                             # (TB, m), exact uint32
+        acc = acc.at[:, :m].add(prod2 & DMASK)
+        acc = acc.at[:, 1:m + 1].add(prod2 >> DBITS)
+        # digit 0 is now 0 mod B: shift down, carrying its high part
+        c0 = acc[:, 0:1] >> DBITS
+        acc = jnp.concatenate(
+            [acc[:, 1:], jnp.zeros((tb, 1), U32)], axis=1)
+        acc = acc.at[:, 0:1].add(c0)
+    return acc
+
+
+def cond_subtract(t, n):
+    """Branch-free conditional subtract: t if t < n else t - n.
+
+    t: (TB, m+1) normalized digits with t < 2n; n: (1, m) or (TB, m).
+    Radix-complement add computes t - n + B**(m+1); the carry out of the
+    top digit (1 iff t >= n) selects between the two candidates.
+    """
+    tb = t.shape[0]
+    m = t.shape[1] - 1
+    comp = jnp.concatenate(
+        [DMASK - n, jnp.full((n.shape[0], 1), DMASK, U32)], axis=1)
+    s = (t + comp).at[:, 0:1].add(1)              # lazy, < 2**17 + 1
+    ext = jnp.concatenate([s, jnp.zeros((tb, 1), U32)], axis=1)
+    sn = normalize_static(ext)                    # (TB, m+2)
+    ge = sn[:, m + 1:m + 2]                       # carry out: 1 iff t >= n
+    return jnp.where(ge == 1, sn[:, :m], t[:, :m])
+
+
+def make_mont_kernel(m: int, n0p: int):
+    """Kernel body specialized to a modulus width m and constant n0p."""
+
+    def mont_mul_kernel(a_ref, b_ref, n_ref, out_ref):
+        a = a_ref[...]                            # (TB, m) digits < 2**16
+        b = b_ref[...]
+        n = n_ref[...]                            # (1, m) modulus digits
+        acc = cios_iterations(a, b, n, n0p)
+        t = normalize_static(acc)                 # single deferred resolve
+        out_ref[...] = cond_subtract(t, n)
+
+    return mont_mul_kernel
+
+
+@functools.lru_cache(maxsize=64)
+def make_call(batch_tile: int, m: int, grid: int, n0p: int,
+              interpret: bool):
+    """pallas_call for the fused Montgomery multiply.
+
+    Inputs: a, b (grid*TB, m) digit arrays and the (1, m) modulus block
+    (broadcast to every program).  Output: (grid*TB, m) digits < n.
+    """
+    return pl.pallas_call(
+        make_mont_kernel(m, n0p),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((batch_tile, m), lambda i: (i, 0)),
+                  pl.BlockSpec((batch_tile, m), lambda i: (i, 0)),
+                  pl.BlockSpec((1, m), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((batch_tile, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid * batch_tile, m), U32),
+        interpret=interpret,
+    )

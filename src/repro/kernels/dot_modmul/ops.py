@@ -1,0 +1,115 @@
+"""Jit'd wrappers for the fused Montgomery-multiply Pallas kernel.
+
+Mirrors dot_add/ops: interpret mode auto-selected on CPU, batch padded to
+the tile size and trimmed after the call.  The kernel is specialized per
+modulus (n0p baked in); the modulus digit vector rides along as a (1, m)
+operand broadcast to every program.
+
+``dot_mod_exp`` is the batched constant-time square-and-multiply driver:
+both branches computed every bit, result selected by the exponent bit --
+each ladder step is two fused kernel launches whose (TB, m) working set
+stays in VMEM for the whole CIOS loop.
+
+Accepts any Montgomery context exposing ``m / n0p / n_digits / r2_digits
+/ one_digits`` (core.modular.MontCtx); kept duck-typed so the kernel
+layer has no dependency on the dispatch layer built on top of it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.dot_modmul import kernel as K
+
+U32 = jnp.uint32
+
+# Lazy-digit overflow bound (see core/modular.py): digits < 5*m*2**16
+# must stay below 2**32.
+MAX_DIGITS = 1 << 13
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret
+
+
+def _tile_for(m: int, batch: int) -> int:
+    # ~8 live (TB, m+1) u32 arrays in the CIOS loop (a, b, n, acc, two
+    # product temps, normalize temps) -> TB*m <= 32k words (~1 MB).
+    tb = max(8, min(256, (32 * 1024) // max(8, m)))
+    return min(tb, max(8, batch))
+
+
+@functools.partial(jax.jit, static_argnames=("n0p", "interpret"))
+def _mont_mul_call(a, b, n_row, n0p: int, interpret: bool):
+    batch, m = a.shape
+    tb = _tile_for(m, batch)
+    pad = (-batch) % tb
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+    grid = a.shape[0] // tb
+    out = K.make_call(tb, m, grid, n0p, interpret)(a, b, n_row)
+    return out[:batch]
+
+
+@functools.partial(jax.jit, static_argnames=("n0p", "interpret"))
+def _mod_exp_call(base, eb, n_row, r2_row, one_row, n0p: int,
+                  interpret: bool):
+    batch, m = base.shape
+    tb = _tile_for(m, batch)
+    pad = (-batch) % tb
+    if pad:
+        base = jnp.pad(base, ((0, pad), (0, 0)))
+        eb = jnp.pad(eb, ((0, pad), (0, 0)))
+    bp = base.shape[0]
+    grid = bp // tb
+    call = K.make_call(tb, m, grid, n0p, interpret)
+
+    def mm(x, y):
+        return call(x, y, n_row)
+
+    x = mm(base, jnp.broadcast_to(r2_row, (bp, m)))   # to Montgomery form
+    res0 = jnp.broadcast_to(one_row, (bp, m)).astype(U32)
+    eb_t = jnp.moveaxis(eb, -1, 0)                    # (nbits, bp)
+
+    def step(res, bit):
+        sq = mm(res, res)
+        mul = mm(sq, x)
+        return jnp.where((bit == 1)[:, None], mul, sq), None
+
+    res, _ = jax.lax.scan(step, res0, eb_t)
+    plain_one = jnp.zeros((1, m), U32).at[0, 0].set(1)
+    out = mm(res, jnp.broadcast_to(plain_one, (bp, m)))  # leave Mont form
+    return out[:batch]
+
+
+def dot_mont_mul(a, b, ctx, interpret=None):
+    """(batch, m) digit arrays x2 -> (batch, m) of a*b*R^{-1} mod n."""
+    assert ctx.m <= MAX_DIGITS, "lazy digits overflow uint32 beyond 2**13"
+    a = jnp.asarray(a, U32)
+    b = jnp.asarray(b, U32)
+    n_row = jnp.asarray(ctx.n_digits, U32)[None, :]
+    return _mont_mul_call(a, b, n_row, int(ctx.n0p),
+                          _auto_interpret(interpret))
+
+
+def dot_mod_exp(base, exp_bits, ctx, interpret=None):
+    """(batch, m) digits ** exp -> (batch, m) digits of base**e mod n.
+
+    exp_bits: (nbits,) or (batch, nbits) bits MSB-first (uint32/int32).
+    Constant-time ladder: square always, multiply always, select by bit.
+    """
+    assert ctx.m <= MAX_DIGITS, "lazy digits overflow uint32 beyond 2**13"
+    base = jnp.asarray(base, U32)
+    eb = jnp.asarray(exp_bits, U32)
+    if eb.ndim == 1:
+        eb = jnp.broadcast_to(eb, (base.shape[0], eb.shape[-1]))
+    n_row = jnp.asarray(ctx.n_digits, U32)[None, :]
+    r2_row = jnp.asarray(ctx.r2_digits, U32)[None, :]
+    one_row = jnp.asarray(ctx.one_digits, U32)[None, :]
+    return _mod_exp_call(base, eb, n_row, r2_row, one_row,
+                         int(ctx.n0p), _auto_interpret(interpret))

@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.configs import ARCH_IDS, get_config
 from repro.distributed import sharding as sh
 from repro.launch import hlo_stats
@@ -198,7 +199,7 @@ def run_cell(arch, shape_name, mesh_kind, variant, out_dir,
             "alias_bytes": mem.alias_size_in_bytes,
             "code_bytes": mem.generated_code_size_in_bytes,
         }
-        cost = compiled.cost_analysis()
+        cost = compat.cost_analysis_dict(compiled)
         rec["cost"] = {"flops": cost.get("flops", 0.0),
                        "bytes_accessed": cost.get("bytes accessed", 0.0)}
         txt = compiled.as_text()

@@ -23,7 +23,7 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
-from typing import Dict, Optional
+from typing import Optional
 
 from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
 

@@ -12,8 +12,7 @@ Design notes (these matter for the dry-run/roofline methodology):
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

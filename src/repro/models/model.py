@@ -14,9 +14,7 @@ Families:
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

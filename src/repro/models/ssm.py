@@ -16,7 +16,6 @@ Numerical notes:
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

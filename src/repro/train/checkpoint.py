@@ -22,13 +22,12 @@ Fault-tolerance contract:
 """
 from __future__ import annotations
 
-import dataclasses
 import json
 import pathlib
 import shutil
 import threading
 import zlib
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import numpy as np

@@ -19,9 +19,8 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from typing import Callable, List, Optional
+from typing import List, Optional
 
-import numpy as np
 
 from repro.train import checkpoint as CKPT
 

@@ -6,7 +6,6 @@ apply verbatim to m/v (distributed/sharding.py).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp

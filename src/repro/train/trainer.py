@@ -18,12 +18,9 @@ Gradient-reduction modes:
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import exact_accum as EA
 from repro.train import optimizer as OPT

@@ -1,7 +1,6 @@
 """Checkpoint/restore, integrity (CRC + RSA), restart fallback, straggler
 monitor, elastic planning."""
 import json
-import pathlib
 
 import jax
 import jax.numpy as jnp

@@ -11,6 +11,8 @@ import sys
 
 import pytest
 
+pytestmark = pytest.mark.slow  # each test compiles in a child interpreter
+
 SRC = str(pathlib.Path(__file__).resolve().parent.parent / "src")
 
 
@@ -30,6 +32,7 @@ def test_exact_psum_topology_invariance():
     run_child("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.core import exact_accum as EA
 from repro.distributed.collectives import exact_psum_tree
 
@@ -48,7 +51,7 @@ for shape, axes in [((8,), ("data",)), ((4, 2), ("data", "model")),
         tot = jax.lax.psum(acc, "data")
         return EA.decode(EA.normalize(tot))
 
-    fm = jax.shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P())
+    fm = shard_map(f, mesh=mesh, in_specs=P("data"), out_specs=P())
     with mesh:
         outs[shape] = np.asarray(fm(jnp.asarray(x)))
 # 8-way, 4-way, 2-way reductions of the same data: bitwise identical
@@ -66,6 +69,7 @@ def test_int8_ef_psum():
     run_child("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.distributed.collectives import int8_ef_psum
 
 mesh = jax.make_mesh((8,), ("data",))
@@ -75,8 +79,8 @@ def f(xl, ef):
     m, ef = int8_ef_psum(xl[0], ef[0], "data", 8)
     return m[None], ef[None]
 
-fm = jax.shard_map(f, mesh=mesh, in_specs=(P("data"), P("data")),
-                   out_specs=(P("data"), P("data")))
+fm = shard_map(f, mesh=mesh, in_specs=(P("data"), P("data")),
+               out_specs=(P("data"), P("data")))
 ef = jnp.zeros((8, 128), jnp.float32)
 with mesh:
     mean, ef = fm(jnp.asarray(x), ef)
@@ -99,6 +103,7 @@ def test_psum_matmul_ring():
     run_child("""
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
 from repro.distributed.collectives import psum_matmul_ring
 
 mesh = jax.make_mesh((8,), ("model",))
@@ -109,8 +114,8 @@ w = rng.standard_normal((64, 32)).astype(np.float32)
 def f(xl, wl):
     return psum_matmul_ring(xl, wl, "model", 8)
 
-fm = jax.shard_map(f, mesh=mesh, in_specs=(P(None, "model"), P("model", None)),
-                   out_specs=P(), check_vma=False)
+fm = shard_map(f, mesh=mesh, in_specs=(P(None, "model"), P("model", None)),
+               out_specs=P(), check_vma=False)
 with mesh:
     out = np.asarray(fm(jnp.asarray(x), jnp.asarray(w)))
 np.testing.assert_allclose(out, x @ w, rtol=2e-4, atol=2e-4)
@@ -195,7 +200,8 @@ def train_step(params, opt, batch):
 with mesh:
     co = jax.jit(train_step, in_shardings=(p_shard, o_shard, b_shard),
                  donate_argnums=(0, 1)).lower(params_s, opt_s, batch_s).compile()
-c = co.cost_analysis()
+from repro.compat import cost_analysis_dict
+c = cost_analysis_dict(co)
 assert c["flops"] > 0
 print("OK", c["flops"])
 """)

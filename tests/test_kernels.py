@@ -1,7 +1,6 @@
 """Per-kernel correctness: Pallas (interpret mode on CPU) vs the pure-jnp
 oracle (ref.py), swept over shapes; oracles themselves are tested against
 Python-int ground truth elsewhere."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -1,7 +1,14 @@
-"""Hypothesis property-based tests on the system's core invariants."""
+"""Hypothesis property-based tests on the system's core invariants.
+
+hypothesis is a dev-only dependency (``pip install -e .[dev]``); a bare
+environment skips this module instead of erroring at collection.
+"""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import repro.core.add as A
 import repro.core.mul as M
