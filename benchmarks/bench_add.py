@@ -2,8 +2,12 @@
 
 Compares DoT against the prior-work dependency structures (sequential ADC
 chain, naive SIMD ripple, full KSA, two-level KSA [y-cruncher], carry-
-select [Ren et al.]) on random and pathological operands, reporting wall
-time and HLO instruction counts.
+select [Ren et al.]) and the Pallas dot_add kernel, on random and
+pathological operands, reporting wall time and HLO instruction counts.
+
+Emits machine-readable records (op, bits, batch, backend, ns/op,
+speedup-vs-jnp with the jnp DoT strategy as the baseline) when driven
+through benchmarks/run.py --json-out.
 """
 from __future__ import annotations
 
@@ -13,7 +17,8 @@ import numpy as np
 
 import repro.core.add as A
 from repro.core import limbs as L
-from benchmarks.util import hlo_ops, row, time_fn
+from repro.kernels.dot_add import ops as add_kernel_ops
+from benchmarks.util import hlo_ops, record, row, time_fn
 
 SIZES = (512, 1024, 2048, 4096, 8192, 16384, 32768)
 BATCH = 512
@@ -35,31 +40,46 @@ def _operands(rng, nbits, batch, pathological=False):
             jnp.asarray(L.ints_to_batch(ys, m)))
 
 
-def run(full: bool = False):
+def run(full: bool = False, smoke: bool = False, records=None):
     rng = np.random.default_rng(0)
     out = []
-    sizes = SIZES if full else SIZES[::2]
+    if smoke:
+        sizes, batch, iters = (512, 2048), 64, 3
+    else:
+        sizes, batch, iters = (SIZES if full else SIZES[::2]), BATCH, 10
     for nbits in sizes:
-        a, b = _operands(rng, nbits, BATCH)
-        ap, bp = _operands(rng, nbits, BATCH, pathological=True)
-        base_t = None
+        a, b = _operands(rng, nbits, batch)
+        ap, bp = _operands(rng, nbits, batch, pathological=True)
+        strat_times = {}
         for strat in STRATEGIES:
             fn = jax.jit(lambda x, y, s=strat: A.ADD_STRATEGIES[s](x, y))
-            t = time_fn(fn, a, b, iters=10)
-            tp = time_fn(fn, ap, bp, iters=5)
+            t = time_fn(fn, a, b, iters=iters)
+            tp = time_fn(fn, ap, bp, iters=max(2, iters // 2))
             ops = hlo_ops(lambda x, y, s=strat: A.ADD_STRATEGIES[s](x, y), a, b)
-            if strat == "seq":
-                base_t = t
-            out.append(row(f"add/{nbits}b/{strat}", t / BATCH,
-                           f"speedup_vs_seq={base_t / t:.2f}x ops={ops} "
-                           f"patho_us={tp / BATCH * 1e6:.2f}"))
+            strat_times[strat] = t
+            out.append(row(f"add/{nbits}b/{strat}", t / batch,
+                           f"speedup_vs_seq={strat_times['seq'] / t:.2f}x "
+                           f"ops={ops} patho_us={tp / batch * 1e6:.2f}"))
+        # the Pallas kernel riding the same records stream; jitted like
+        # every strategy above so the recorded ratio compares kernels,
+        # not Python wrapper overhead
+        t_dot = strat_times["dot"]
+        t_pal = time_fn(jax.jit(lambda x, y: add_kernel_ops.dot_add(x, y)),
+                        a, b, iters=iters)
+        out.append(row(f"add/{nbits}b/pallas", t_pal / batch,
+                       f"speedup_vs_dot={t_dot / t_pal:.2f}x"))
+        for strat, t in strat_times.items():
+            record(records, op="add", bits=nbits, batch=batch, backend=strat,
+                   seconds_per_call=t, baseline_seconds=t_dot)
+        record(records, op="add", bits=nbits, batch=batch, backend="pallas",
+               seconds_per_call=t_pal, baseline_seconds=t_dot)
     # subtraction spot check (paper reports symmetric results)
-    for nbits in (2048,):
-        a, b = _operands(rng, nbits, BATCH)
+    for nbits in ((2048,) if not smoke else ()):
+        a, b = _operands(rng, nbits, batch)
         for strat in ("seq", "dot"):
             fn = jax.jit(lambda x, y, s=strat: A.SUB_STRATEGIES[s](x, y))
-            t = time_fn(fn, a, b, iters=10)
-            out.append(row(f"sub/{nbits}b/{strat}", t / BATCH, ""))
+            t = time_fn(fn, a, b, iters=iters)
+            out.append(row(f"sub/{nbits}b/{strat}", t / batch, ""))
     return out
 
 

@@ -12,12 +12,98 @@ Prints ``name,us_per_call,derived`` CSV.  ``--full`` widens the operand
 grid (slower); ``--smoke`` shrinks suites that support it to tiny sizes
 and 1-2 reps (the CI bitrot guard).  Individual suites:
 ``python -m benchmarks.bench_add``.
+
+Perf trajectory across PRs: suites that support it (add, mul) also
+produce machine-readable records.  ``--json-out DIR`` writes/merges them
+into DIR/BENCH_<suite>.json (keyed by op/bits/batch/backend, so smoke
+and full runs coexist in one file); ``--check-baseline`` compares the
+fresh records against the committed benchmarks/BENCH_<suite>.json and
+fails if any Pallas backend's speedup-vs-jnp regressed by more than
+REGRESS_TOLERANCE (the CI perf gate).
+
+The committed smoke-key baselines are conservative FLOORS, not point
+estimates: interpret-mode speedup ratios swing 1.5-3x run-to-run on
+loaded CPU runners, so the gated values are set low enough that only a
+structural regression (the fused path no longer decisively beating the
+jnp composition) trips them.  The batch-512 rows record the measured
+trajectory at full precision.
 """
 import argparse
 import inspect
+import json
+import os
 import sys
 import time
 import traceback
+
+REGRESS_TOLERANCE = 0.20          # fail if speedup drops > 20% vs baseline
+BASELINE_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def _key(rec):
+    return (rec["op"], rec["bits"], rec["batch"], rec["backend"])
+
+
+def _baseline_path(suite: str, out_dir: str | None = None) -> str:
+    return os.path.join(out_dir or BASELINE_DIR, f"BENCH_{suite}.json")
+
+
+def write_json(suite: str, records: list, out_dir: str) -> str:
+    """Merge records into DIR/BENCH_<suite>.json (new keys win)."""
+    path = _baseline_path(suite, out_dir)
+    merged = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            for rec in json.load(f)["records"]:
+                merged[_key(rec)] = rec
+    for rec in records:
+        merged[_key(rec)] = rec
+    payload = {
+        "schema": "op,bits,batch,backend,ns_per_op,speedup_vs_jnp",
+        "records": sorted(merged.values(),
+                          key=lambda r: (r["op"], r["bits"], r["batch"],
+                                         r["backend"])),
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    return path
+
+
+def check_baseline(suite: str, records: list,
+                   tolerance: float = REGRESS_TOLERANCE) -> list[str]:
+    """Regression messages for Pallas backends vs the committed baseline.
+
+    Compares the machine-independent speedup-vs-jnp ratio (both sides of
+    the ratio are measured in the same run, so a slow CI machine cancels
+    out); only keys present in both sets are judged.  The gate covers
+    the multiply pipeline at kernel-sized operands (op "mul", >= 512
+    bits): sub-512-bit micro rows and the add strategy sweep are
+    recorded for the trajectory but their per-call times are too small
+    for run-to-run-stable ratios.
+    """
+    path = _baseline_path(suite)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        baseline = {_key(r): r for r in json.load(f)["records"]}
+    problems = []
+    for rec in records:
+        if rec["op"] != "mul" or rec["bits"] < 512:
+            continue
+        if "pallas" not in rec["backend"] and "kernel" not in rec["backend"]:
+            continue
+        base = baseline.get(_key(rec))
+        if not base or not base.get("speedup_vs_jnp") \
+                or not rec.get("speedup_vs_jnp"):
+            continue
+        floor = base["speedup_vs_jnp"] * (1.0 - tolerance)
+        if rec["speedup_vs_jnp"] < floor:
+            problems.append(
+                f"{suite}:{'/'.join(map(str, _key(rec)))} speedup "
+                f"{rec['speedup_vs_jnp']:.2f}x < {floor:.2f}x "
+                f"(baseline {base['speedup_vs_jnp']:.2f}x - {tolerance:.0%})")
+    return problems
 
 
 def main() -> None:
@@ -26,6 +112,11 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated suite names (e.g. add,mul)")
+    ap.add_argument("--json-out", default=None, metavar="DIR",
+                    help="write/merge BENCH_<suite>.json records here")
+    ap.add_argument("--check-baseline", action="store_true",
+                    help="fail if a Pallas backend regressed >20%% vs the "
+                         "committed BENCH_<suite>.json speedup baseline")
     args = ap.parse_args()
 
     from benchmarks import (bench_add, bench_breakdown, bench_crypto,
@@ -39,12 +130,17 @@ def main() -> None:
     pick = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")
     failures = 0
+    regressions: list[str] = []
     for name in pick:
         mod = suites[name]
         t0 = time.time()
+        sig = inspect.signature(mod.run).parameters
         kwargs = {"full": args.full}
-        if args.smoke and "smoke" in inspect.signature(mod.run).parameters:
+        if args.smoke and "smoke" in sig:
             kwargs["smoke"] = True
+        records: list = []
+        if "records" in sig:
+            kwargs["records"] = records
         try:
             for line in mod.run(**kwargs):
                 print(line, flush=True)
@@ -53,7 +149,20 @@ def main() -> None:
             failures += 1
             print(f"# suite {name} FAILED:", flush=True)
             traceback.print_exc()
-    if failures:
+            continue
+        # check BEFORE writing: --json-out pointed at the baseline dir
+        # must not overwrite the baseline the check compares against
+        if records and args.check_baseline:
+            regressions.extend(check_baseline(name, records))
+        if records and args.json_out:
+            path = write_json(name, records, args.json_out)
+            print(f"# wrote {path} ({len(records)} records)", flush=True)
+    from repro.kernels.common import autotune
+    if autotune.enabled() and autotune.cache_summary():
+        print(f"# autotuned tiles: {autotune.cache_summary()}", flush=True)
+    for msg in regressions:
+        print(f"# PERF REGRESSION: {msg}", flush=True)
+    if failures or regressions:
         sys.exit(1)
 
 

@@ -35,3 +35,26 @@ def hlo_ops(fn, *args) -> int:
 
 def row(name: str, seconds: float, derived: str = "") -> str:
     return f"{name},{seconds * 1e6:.1f},{derived}"
+
+
+def record(records, *, op: str, bits: int, batch: int, backend: str,
+           seconds_per_call: float, baseline_seconds: float | None) -> None:
+    """Append one machine-readable benchmark record (see run.py --json-out).
+
+    ``seconds_per_call`` covers the whole batch; ns/op is per batch
+    element.  ``baseline_seconds`` is the jnp composition's time for the
+    same (op, bits, batch) -- the speedup denominator tracked across PRs.
+    No-op when records is None (suites run standalone).
+    """
+    if records is None:
+        return
+    records.append({
+        "op": op,
+        "bits": int(bits),
+        "batch": int(batch),
+        "backend": backend,
+        "ns_per_op": round(seconds_per_call * 1e9 / max(1, batch), 1),
+        "speedup_vs_jnp": (
+            round(baseline_seconds / seconds_per_call, 3)
+            if baseline_seconds else None),
+    })

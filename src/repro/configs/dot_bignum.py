@@ -9,6 +9,25 @@ from typing import Tuple
 
 
 @dataclasses.dataclass(frozen=True)
+class MulDispatchConfig:
+    """Size thresholds for core/mul.select_method (the unified multiply
+    pipeline front door).  Bits are operand widths; boundaries follow the
+    kernel ranges: the fused Karatsuba kernel's overflow analysis covers
+    512..4096 bits, below that a single VnC base-case launch wins, and at
+    tiny widths kernel-launch overhead dominates so the jnp composition
+    is used directly."""
+
+    jnp_max_bits: int = 256           # <= : jnp VnC ("dot")
+    vnc_max_bits: int = 512           # <= : Pallas VnC kernel ("pallas")
+    fused_kara_max_bits: int = 4096   # <= : fused Karatsuba ("pallas_kara")
+    mxu_max_bits: int = 4096          # <= : int8 Toeplitz ("pallas_mxu")
+    kara_threshold_digits: int = 32   # leaf width inside the fused kernel
+
+
+MUL_DISPATCH = MulDispatchConfig()
+
+
+@dataclasses.dataclass(frozen=True)
 class DoTBenchConfig:
     operand_bits: Tuple[int, ...] = (
         512, 1024, 2048, 3072, 4096, 6144, 8192, 12288,

@@ -41,6 +41,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.common.vnc import skew as _skew
+
 U32 = jnp.uint32
 I32 = jnp.int32
 
@@ -153,19 +155,9 @@ def normalize_digits_scan(cols: jax.Array,
 
 
 # ---------------------------------------------------------------------------
-# The skew trick: Phase 3's column alignment as a static reshape.
+# The skew trick (Phase 3's column alignment as a static reshape) is
+# ``_skew``, shared with the kernel layer: kernels/common/vnc.skew.
 # out[..., i, i+j] = mat[..., i, j]; anti-diagonal sums become column sums.
-# ---------------------------------------------------------------------------
-
-def _skew(mat: jax.Array) -> jax.Array:
-    *lead, m, m2 = mat.shape
-    assert m == m2, "square (..., m, m) expected"
-    pad = jnp.pad(mat, [(0, 0)] * len(lead) + [(0, 0), (0, m)])
-    flat = pad.reshape(*lead, m * 2 * m)
-    flat = flat[..., : m * (2 * m - 1)]
-    return flat.reshape(*lead, m, 2 * m - 1)
-
-
 # ---------------------------------------------------------------------------
 # DoT multiplication (Algorithm 2) --- VPU path, radix 2**16.
 # ---------------------------------------------------------------------------
@@ -353,16 +345,86 @@ def mul_karatsuba(a: jax.Array, b: jax.Array, threshold: int = 16,
 # 32-bit limb entry points (the GMP/OpenSSL-facing API of sec 3.3: accept
 # the saturated radix used by the host library, convert, multiply, convert
 # back --- the "radix conversion packing at entry / unpacking at exit").
+#
+# The unified pipeline front door: ``method="auto"`` routes through
+# ``select_method`` (size-based dispatch over the jnp compositions AND the
+# Pallas kernel family -- VPU-VnC, MXU Toeplitz, fused Karatsuba).
 # ---------------------------------------------------------------------------
+
+MUL_METHODS = ("dot", "mxu", "schoolbook", "karatsuba",
+               "pallas", "pallas_mxu", "pallas_kara")
+
+
+def select_method(nbits: int, batch: int = 1,
+                  prefer_mxu: bool = False) -> str:
+    """Size-based multiply dispatch (see configs/dot_bignum.MUL_DISPATCH).
+
+    * tiny operands: the jnp VnC composition ("dot"); a kernel launch
+      costs more than it saves,
+    * up to one base case (512 bits): the single-launch Pallas VnC
+      kernel ("pallas"),
+    * 512..4096 bits: the fused Karatsuba kernel ("pallas_kara"),
+    * beyond the fused kernel's overflow analysis: the jnp Karatsuba
+      composition ("karatsuba").
+
+    ``prefer_mxu`` selects the int8 Toeplitz kernel where its range
+    allows (worth it when the MXU would otherwise sit idle).  The
+    environment override REPRO_MUL_BACKEND wins over everything (ops
+    knob for A/B experiments without code changes).
+    """
+    import os
+
+    from repro.configs.dot_bignum import MUL_DISPATCH as cfg
+
+    env = os.environ.get("REPRO_MUL_BACKEND", "")
+    if env:
+        if env not in MUL_METHODS:
+            raise ValueError(
+                f"REPRO_MUL_BACKEND={env!r}; choose from {MUL_METHODS}")
+        return env
+    del batch  # reserved for launch-amortization heuristics
+    if prefer_mxu and nbits <= cfg.mxu_max_bits:
+        return "pallas_mxu"
+    if nbits <= cfg.jnp_max_bits:
+        return "dot"
+    if nbits <= cfg.vnc_max_bits:
+        return "pallas"
+    if nbits <= cfg.fused_kara_max_bits:
+        return "pallas_kara"
+    return "karatsuba"
+
+
+def _flatten_leading(x: jax.Array):
+    return x.reshape((-1, x.shape[-1])), x.shape[:-1]
+
 
 def mul_limbs32(a_limbs: jax.Array, b_limbs: jax.Array,
                 method: str = "auto") -> jax.Array:
     """(..., m) uint32 limbs x2 -> (..., 2m) uint32 limbs (full product)."""
     m = a_limbs.shape[-1]
+    if method == "auto":
+        batch = 1
+        for d in a_limbs.shape[:-1]:
+            batch *= int(d)
+        method = select_method(32 * m, batch=batch)
+    if method in ("pallas", "pallas_mxu", "pallas_kara"):
+        # kernel entry points are 2-D (batch, m); imported lazily because
+        # the ops modules import core.mul at module level (cycle) -- core
+        # depends statically only on the pure-jnp kernels/common helpers
+        a2, lead = _flatten_leading(jnp.asarray(a_limbs, U32))
+        b2, _ = _flatten_leading(jnp.asarray(b_limbs, U32))
+        if method == "pallas":
+            from repro.kernels.dot_mul import ops as _k
+            out = _k.dot_mul_limbs32(a2, b2)
+        elif method == "pallas_mxu":
+            from repro.kernels.mxu_mul import ops as _k
+            out = _k.mxu_mul_limbs32(a2, b2)
+        else:
+            from repro.kernels.kara_mul import ops as _k
+            out = _k.kara_mul_limbs32(a2, b2)
+        return out.reshape(lead + (2 * m,))
     a_d = split_digits(a_limbs, DIGIT_BITS)
     b_d = split_digits(b_limbs, DIGIT_BITS)
-    if method == "auto":
-        method = "dot" if a_d.shape[-1] <= 32 else "karatsuba"
     if method == "dot":
         p = dot_mul(a_d, b_d)
     elif method == "mxu":

@@ -1,0 +1,97 @@
+"""Tiny autotune-over-block-shapes cache for the DoT kernel family.
+
+The only block-shape degree of freedom in these kernels is the batch
+tile TB (the digit axis is never split), so "autotuning" is a 1-D sweep:
+time the compiled kernel at each power-of-two candidate tile and cache
+the winner, keyed by ``(op, m, batch, digit_bits)``.
+
+Off by default -- the tiling heuristic is deterministic and good enough
+for tests/CI; set ``REPRO_AUTOTUNE=1`` to let benchmarks measure.  The
+cache is process-local (kernel specializations are jit-cached anyway, so
+a sweep costs one compile per candidate, once per key).
+
+Usage from an ops wrapper (tile selection must happen OUTSIDE jit so the
+sweep can run real timed calls):
+
+    heur = tiling.batch_tile(m, batch, budget=...)
+    tb = autotune.pick_tile("dot_mul", (m, batch, 16), heur, batch,
+                            run=lambda t: _call(a, b, t, ...))
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Optional
+
+import jax
+
+from repro.kernels.common import tiling
+
+_CACHE: dict = {}
+
+
+def enabled() -> bool:
+    return os.environ.get("REPRO_AUTOTUNE", "0").lower() not in (
+        "", "0", "false", "off")
+
+
+def clear_cache() -> None:
+    _CACHE.clear()
+
+
+def cache_summary() -> dict:
+    """{(op, m, batch, digit_bits): best_tile} for docs/benchmark dumps."""
+    return dict(_CACHE)
+
+
+def candidate_tiles(heuristic: int, batch: int,
+                    max_tile: int = tiling.DEFAULT_MAX_TILE) -> list[int]:
+    """Power-of-two tiles up to max_tile (and the heuristic itself)."""
+    cands = {heuristic}
+    t = tiling.MIN_TILE
+    while t <= max_tile:
+        cands.add(min(t, max(tiling.MIN_TILE, batch)))
+        t *= 2
+    return sorted(cands)
+
+
+def pick_tile(op: str, key: tuple, heuristic: int, batch: int,
+              run: Optional[Callable[[int], object]] = None,
+              iters: int = 3,
+              max_tile: int = tiling.DEFAULT_MAX_TILE) -> int:
+    """Best batch tile for (op, *key); the heuristic unless autotuning.
+
+    ``key`` must cover EVERYTHING that changes the compiled kernel
+    besides the tile (m, batch, digit_bits, interpret flag, and any
+    kernel-variant knobs like kara_mul's threshold/base_mode) -- a tile
+    tuned for one variant must not be reused for another.  ``max_tile``
+    caps the sweep at the kernel's own VMEM-derived tile ceiling so the
+    autotuner never times (or caches) a tile the budget analysis
+    excludes.  ``run(tb)`` executes the kernel at tile tb on
+    representative inputs; exceptions from a candidate (e.g. VMEM
+    overflow on real hardware) disqualify it.
+    """
+    if run is None or not enabled():
+        return heuristic
+    try:
+        if not jax.core.trace_state_clean():
+            return heuristic        # inside an outer trace: no timed sweeps
+    except AttributeError:
+        pass
+    full_key = (op,) + tuple(key)
+    if full_key in _CACHE:
+        return _CACHE[full_key]
+    best, best_dt = heuristic, float("inf")
+    for tb in candidate_tiles(heuristic, batch, max_tile=max_tile):
+        try:
+            jax.block_until_ready(run(tb))          # compile + warm
+            t0 = time.perf_counter()
+            for _ in range(iters):
+                jax.block_until_ready(run(tb))
+            dt = (time.perf_counter() - t0) / iters
+        except Exception:  # noqa: BLE001 - candidate disqualified
+            continue
+        if dt < best_dt:
+            best, best_dt = tb, dt
+    _CACHE[full_key] = best
+    return best

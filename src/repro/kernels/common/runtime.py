@@ -1,0 +1,12 @@
+"""Backend/runtime helpers shared by every kernel ops wrapper."""
+from __future__ import annotations
+
+import jax
+
+
+def auto_interpret(interpret: bool | None) -> bool:
+    """Resolve the interpret flag: explicit value wins, else interpret
+    mode on CPU (bit-exact kernel validation) and compiled on TPU."""
+    if interpret is None:
+        return jax.default_backend() == "cpu"
+    return interpret

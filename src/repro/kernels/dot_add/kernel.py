@@ -22,29 +22,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
+from repro.kernels.common.carry import ks_scan_unrolled, shift_up
+
 U32 = jnp.uint32
 MAX32 = np.uint32(0xFFFFFFFF)
 
-
-def ks_scan_unrolled(g, p):
-    """Inclusive (generate, propagate) prefix scan along the last axis,
-    unrolled into log2(m) shift rounds (identity element: g=0, p=1)."""
-    m = g.shape[-1]
-    d = 1
-    while d < m:
-        g_sh = jnp.concatenate(
-            [jnp.zeros_like(g[..., :d]), g[..., :-d]], axis=-1)
-        p_sh = jnp.concatenate(
-            [jnp.ones_like(p[..., :d]), p[..., :-d]], axis=-1)
-        g = g | (p & g_sh)
-        p = p & p_sh
-        d *= 2
-    return g, p
-
-
-def shift_up(c):
-    return jnp.concatenate(
-        [jnp.zeros_like(c[..., :1]), c[..., :-1]], axis=-1)
+# Simultaneously-live (TB, m) u32 arrays in the kernel body: a, b, r,
+# g/p, G, s (see common/tiling.py for how this sizes the batch tile).
+LIVE_U32_ARRAYS = 6
+MAX_TILE = 512
 
 
 def add_kernel(a_ref, b_ref, s_ref, c_ref):

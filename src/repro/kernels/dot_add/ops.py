@@ -3,6 +3,11 @@
 Interpret mode is selected automatically on CPU (the kernel body runs as
 Python/jnp for correctness validation); on TPU the same BlockSpecs tile
 VMEM.  Batch is padded to the tile size and trimmed after the call.
+
+Tile selection lives OUTSIDE the jit boundary so the shared autotuner
+(kernels/common/autotune, opt-in via REPRO_AUTOTUNE=1) can sweep real
+timed calls; the default is the deterministic VMEM-budget heuristic in
+kernels/common/tiling.
 """
 from __future__ import annotations
 
@@ -11,28 +16,22 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import autotune, tiling
+from repro.kernels.common.runtime import auto_interpret as _auto_interpret
 from repro.kernels.dot_add import kernel as K
 
 U32 = jnp.uint32
 
 
-def _auto_interpret(interpret):
-    if interpret is None:
-        return jax.default_backend() == "cpu"
-    return interpret
+def _heuristic_tile(m: int, batch: int) -> int:
+    return tiling.batch_tile(
+        m, batch, budget=tiling.budget_words(K.LIVE_U32_ARRAYS),
+        max_tile=K.MAX_TILE)
 
 
-def _tile_for(m: int, batch: int) -> int:
-    # keep the (a, b, s, + temps) working set well under VMEM (~16 MB):
-    # ~6 live (TB, m) u32 arrays -> TB*m <= 64k words  (~1.5 MB).
-    tb = max(8, min(512, (64 * 1024) // max(8, m)))
-    return min(tb, max(8, batch))
-
-
-@functools.partial(jax.jit, static_argnames=("interpret", "op"))
-def _call(a, b, interpret: bool, op: str):
+@functools.partial(jax.jit, static_argnames=("tb", "interpret", "op"))
+def _call(a, b, tb: int, interpret: bool, op: str):
     batch, m = a.shape
-    tb = _tile_for(m, batch)
     pad = (-batch) % tb
     if pad:
         a = jnp.pad(a, ((0, pad), (0, 0)))
@@ -43,14 +42,24 @@ def _call(a, b, interpret: bool, op: str):
     return s[:batch], c[:batch, 0]
 
 
+def _run(a, b, op: str, interpret):
+    interpret = _auto_interpret(interpret)
+    batch, m = a.shape
+    tb = autotune.pick_tile(
+        f"dot_{op}", (m, batch, 32, interpret),
+        _heuristic_tile(m, batch), batch,
+        run=lambda t: _call(a, b, t, interpret, op), max_tile=K.MAX_TILE)
+    return _call(a, b, tb, interpret, op)
+
+
 def dot_add(a, b, interpret=None):
     """(batch, m) uint32 x2 -> ((batch, m) sum, (batch,) carry_out)."""
     a = jnp.asarray(a, U32)
     b = jnp.asarray(b, U32)
-    return _call(a, b, _auto_interpret(interpret), "add")
+    return _run(a, b, "add", interpret)
 
 
 def dot_sub(a, b, interpret=None):
     a = jnp.asarray(a, U32)
     b = jnp.asarray(b, U32)
-    return _call(a, b, _auto_interpret(interpret), "sub")
+    return _run(a, b, "sub", interpret)

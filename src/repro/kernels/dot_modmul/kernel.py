@@ -33,11 +33,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.kernels.dot_mul.kernel import normalize_static
+from repro.kernels.common.carry import normalize_static
 
 U32 = jnp.uint32
 DMASK = np.uint32(0xFFFF)
 DBITS = np.uint32(16)
+
+# ~8 live (TB, m+1) u32 arrays in the CIOS loop (a, b, n, acc, two
+# product temps, normalize temps) + headroom; sizes the batch tile via
+# common/tiling.
+LIVE_U32_ARRAYS = 12
+MAX_TILE = 256
 
 
 def cios_iterations(a, b, n, n0p):

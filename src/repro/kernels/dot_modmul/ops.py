@@ -21,6 +21,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.common import autotune, tiling
+from repro.kernels.common.runtime import auto_interpret as _auto_interpret
 from repro.kernels.dot_modmul import kernel as K
 
 U32 = jnp.uint32
@@ -30,23 +32,15 @@ U32 = jnp.uint32
 MAX_DIGITS = 1 << 13
 
 
-def _auto_interpret(interpret):
-    if interpret is None:
-        return jax.default_backend() == "cpu"
-    return interpret
-
-
 def _tile_for(m: int, batch: int) -> int:
-    # ~8 live (TB, m+1) u32 arrays in the CIOS loop (a, b, n, acc, two
-    # product temps, normalize temps) -> TB*m <= 32k words (~1 MB).
-    tb = max(8, min(256, (32 * 1024) // max(8, m)))
-    return min(tb, max(8, batch))
+    return tiling.batch_tile(
+        m, batch, budget=tiling.budget_words(K.LIVE_U32_ARRAYS),
+        max_tile=K.MAX_TILE)
 
 
-@functools.partial(jax.jit, static_argnames=("n0p", "interpret"))
-def _mont_mul_call(a, b, n_row, n0p: int, interpret: bool):
+@functools.partial(jax.jit, static_argnames=("tb", "n0p", "interpret"))
+def _mont_mul_call(a, b, n_row, tb: int, n0p: int, interpret: bool):
     batch, m = a.shape
-    tb = _tile_for(m, batch)
     pad = (-batch) % tb
     if pad:
         a = jnp.pad(a, ((0, pad), (0, 0)))
@@ -56,11 +50,10 @@ def _mont_mul_call(a, b, n_row, n0p: int, interpret: bool):
     return out[:batch]
 
 
-@functools.partial(jax.jit, static_argnames=("n0p", "interpret"))
-def _mod_exp_call(base, eb, n_row, r2_row, one_row, n0p: int,
+@functools.partial(jax.jit, static_argnames=("tb", "n0p", "interpret"))
+def _mod_exp_call(base, eb, n_row, r2_row, one_row, tb: int, n0p: int,
                   interpret: bool):
     batch, m = base.shape
-    tb = _tile_for(m, batch)
     pad = (-batch) % tb
     if pad:
         base = jnp.pad(base, ((0, pad), (0, 0)))
@@ -93,8 +86,15 @@ def dot_mont_mul(a, b, ctx, interpret=None):
     a = jnp.asarray(a, U32)
     b = jnp.asarray(b, U32)
     n_row = jnp.asarray(ctx.n_digits, U32)[None, :]
-    return _mont_mul_call(a, b, n_row, int(ctx.n0p),
-                          _auto_interpret(interpret))
+    interpret = _auto_interpret(interpret)
+    n0p = int(ctx.n0p)
+    batch, m = a.shape
+    tb = autotune.pick_tile(
+        "dot_modmul", (m, batch, 16, n0p, interpret),
+        _tile_for(m, batch), batch,
+        run=lambda t: _mont_mul_call(a, b, n_row, t, n0p, interpret),
+        max_tile=K.MAX_TILE)
+    return _mont_mul_call(a, b, n_row, tb, n0p, interpret)
 
 
 def dot_mod_exp(base, exp_bits, ctx, interpret=None):
@@ -111,5 +111,17 @@ def dot_mod_exp(base, exp_bits, ctx, interpret=None):
     n_row = jnp.asarray(ctx.n_digits, U32)[None, :]
     r2_row = jnp.asarray(ctx.r2_digits, U32)[None, :]
     one_row = jnp.asarray(ctx.one_digits, U32)[None, :]
-    return _mod_exp_call(base, eb, n_row, r2_row, one_row,
-                         int(ctx.n0p), _auto_interpret(interpret))
+    interpret = _auto_interpret(interpret)
+    n0p = int(ctx.n0p)
+    batch, m = base.shape
+    # tile chosen outside jit (same pallas_call as the mont-mul entry, so
+    # the sweep shares its cache key and its VMEM-derived tile cap)
+    tb = autotune.pick_tile(
+        "dot_modmul", (m, batch, 16, n0p, interpret),
+        _tile_for(m, batch), batch,
+        run=lambda t: _mont_mul_call(
+            base, jnp.broadcast_to(r2_row, base.shape), n_row, t, n0p,
+            interpret),
+        max_tile=K.MAX_TILE)
+    return _mod_exp_call(base, eb, n_row, r2_row, one_row, tb, n0p,
+                         interpret)

@@ -23,24 +23,17 @@ import jax.numpy as jnp
 import numpy as np
 from jax.experimental import pallas as pl
 
-from repro.kernels.dot_add.kernel import ks_scan_unrolled, shift_up
+from repro.kernels.common.carry import normalize_static
 
 U32 = jnp.uint32
 DMASK = np.uint32(0xFFFF)
 DBITS = np.uint32(16)
 
-
-def normalize_static(cols, digit_bits: int = 16):
-    """Exact carry normalization with static control flow (kernel-safe)."""
-    mask = np.uint32((1 << digit_bits) - 1)
-    bits = np.uint32(digit_bits)
-    for _ in range(2):                       # deferred-carry passes
-        cols = (cols & mask) + shift_up(cols >> bits)
-    g = (cols >> bits).astype(U32)           # now in {0, 1}
-    low = cols & mask
-    p = (low == mask).astype(U32)
-    G, _ = ks_scan_unrolled(g, p)
-    return (low + shift_up(G)) & mask
+# The (TB, 2m) column accumulator plus operands, products, and the
+# normalize temps -- counted in (TB, m)-array equivalents for the
+# common/tiling VMEM budget.
+LIVE_U32_ARRAYS = 24
+MAX_TILE = 256
 
 
 def mul_kernel(a_ref, b_ref, p_ref):

@@ -2,7 +2,9 @@
 
 Accepts either 16-bit digit arrays (native) or 32-bit limb arrays (the
 GMP/OpenSSL-facing saturated radix; converted at entry/exit like the
-paper's 4x4 routine pays for 64<->52 packing).
+paper's 4x4 routine pays for 64<->52 packing).  Tile selection happens
+outside jit via kernels/common (heuristic by default, measured sweep
+under REPRO_AUTOTUNE=1).
 """
 from __future__ import annotations
 
@@ -12,22 +14,22 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import mul as coremul
+from repro.kernels.common import autotune, tiling
+from repro.kernels.common.runtime import auto_interpret as _auto_interpret
 from repro.kernels.dot_mul import kernel as K
 
 U32 = jnp.uint32
 
 
-def _auto_interpret(interpret):
-    if interpret is None:
-        return jax.default_backend() == "cpu"
-    return interpret
+def _heuristic_tile(m: int, batch: int) -> int:
+    return tiling.batch_tile(
+        m, batch, budget=tiling.budget_words(K.LIVE_U32_ARRAYS),
+        max_tile=K.MAX_TILE)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def _call(a, b, interpret: bool):
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def _call(a, b, tb: int, interpret: bool):
     batch, m = a.shape
-    tb = max(8, min(256, (16 * 1024) // max(8, m)))
-    tb = min(tb, max(8, batch))
     pad = (-batch) % tb
     if pad:
         a = jnp.pad(a, ((0, pad), (0, 0)))
@@ -41,7 +43,13 @@ def dot_mul_digits(a_digits, b_digits, interpret=None):
     """(batch, m) uint32 radix-2**16 digits -> (batch, 2m) digits."""
     a = jnp.asarray(a_digits, U32)
     b = jnp.asarray(b_digits, U32)
-    return _call(a, b, _auto_interpret(interpret))
+    interpret = _auto_interpret(interpret)
+    batch, m = a.shape
+    tb = autotune.pick_tile(
+        "dot_mul", (m, batch, 16, interpret),
+        _heuristic_tile(m, batch), batch,
+        run=lambda t: _call(a, b, t, interpret), max_tile=K.MAX_TILE)
+    return _call(a, b, tb, interpret)
 
 
 def dot_mul_limbs32(a_limbs, b_limbs, interpret=None):

@@ -12,16 +12,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.exact_accum import DEFAULT, ExactAccumConfig
+from repro.kernels.common.runtime import auto_interpret as _auto_interpret
 from repro.kernels.exact_accum import kernel as K
 
 U32 = jnp.uint32
 _N = 256   # lane tile
-
-
-def _auto_interpret(interpret):
-    if interpret is None:
-        return jax.default_backend() == "cpu"
-    return interpret
 
 
 def _as2d(x):

@@ -1,0 +1,16 @@
+"""Oracles for the fused Karatsuba kernel.
+
+``kara_mul_digits_ref`` is the jnp Karatsuba composition (itself
+oracle-tested against Python ints in tests/test_mul.py); the kernel tests
+additionally check digits against Python-int ground truth directly so a
+kernel bug and a core/mul.py bug cannot cancel.
+"""
+from repro.core.mul import mul_karatsuba, mul_limbs32
+
+
+def kara_mul_digits_ref(a_digits, b_digits):
+    return mul_karatsuba(a_digits, b_digits)
+
+
+def kara_mul_limbs32_ref(a_limbs, b_limbs):
+    return mul_limbs32(a_limbs, b_limbs, method="karatsuba")

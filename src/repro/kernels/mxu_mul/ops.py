@@ -1,0 +1,64 @@
+"""Jit'd wrappers for the MXU Toeplitz multiplication kernel.
+
+Digit entry point takes radix-2**7 digits (any int dtype, cast to int8);
+the 32-bit limb entry point pays the radix conversion at entry/exit.
+The tile heuristic is kernel-specific: the per-row Toeplitz band costs
+~2*m*m int8 bytes per batch element (quadratic in m, unlike the linear
+working sets of the VPU kernels), so the tile is sized against that.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import autotune, tiling
+from repro.kernels.common.runtime import auto_interpret as _auto_interpret
+from repro.kernels.mxu_mul import kernel as K
+
+U32 = jnp.uint32
+I8 = jnp.int8
+
+
+def _heuristic_tile(m: int, batch: int) -> int:
+    bytes_per_elem = 2 * m * m + 32 * m          # T band + linear temps
+    budget = 2 * tiling.TARGET_WORKING_SET_BYTES  # matmul band is the point
+    tb = max(tiling.MIN_TILE, min(256, budget // max(1, bytes_per_elem)))
+    return min(tb, max(tiling.MIN_TILE, batch))
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def _call(a, b, tb: int, interpret: bool):
+    batch, m = a.shape
+    pad = (-batch) % tb
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+    grid = a.shape[0] // tb
+    p = K.make_call(tb, m, grid, interpret)(a, b)
+    return p[:batch]
+
+
+def mxu_mul_digits(a_digits, b_digits, interpret=None):
+    """(batch, m) radix-2**7 digits -> (batch, 2m) normalized digits."""
+    a = jnp.asarray(a_digits, I8)
+    b = jnp.asarray(b_digits, I8)
+    interpret = _auto_interpret(interpret)
+    batch, m = a.shape
+    tb = autotune.pick_tile(
+        "mxu_mul", (m, batch, K.MXU_DIGIT_BITS, interpret),
+        _heuristic_tile(m, batch), batch,
+        run=lambda t: _call(a, b, t, interpret), max_tile=256)
+    return _call(a, b, tb, interpret)
+
+
+def mxu_mul_limbs32(a_limbs, b_limbs, interpret=None):
+    """(batch, m) uint32 saturated limbs -> (batch, 2m) limbs (full
+    product), radix-converted 32 <-> 7 at entry/exit."""
+    from repro.core import mul as coremul
+    m = a_limbs.shape[-1]
+    a_d = coremul.split_digits(jnp.asarray(a_limbs, U32), K.MXU_DIGIT_BITS)
+    b_d = coremul.split_digits(jnp.asarray(b_limbs, U32), K.MXU_DIGIT_BITS)
+    p_d = mxu_mul_digits(a_d, b_d, interpret)
+    return coremul.join_digits(p_d, K.MXU_DIGIT_BITS, 2 * m)

@@ -1,0 +1,12 @@
+"""Oracles for the MXU Toeplitz kernel: the jnp MXU path in core/mul.py
+(itself oracle-tested against Python ints in tests/test_mul.py); kernel
+tests additionally check against Python-int ground truth directly."""
+from repro.core.mul import dot_mul_mxu, mul_limbs32
+
+
+def mxu_mul_digits_ref(a_digits, b_digits):
+    return dot_mul_mxu(a_digits, b_digits)
+
+
+def mxu_mul_limbs32_ref(a_limbs, b_limbs):
+    return mul_limbs32(a_limbs, b_limbs, method="mxu")

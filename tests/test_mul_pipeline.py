@@ -1,0 +1,274 @@
+"""The unified multiply pipeline: fused Karatsuba + MXU Toeplitz kernels
+vs Python-int ground truth, core/mul.py dispatch coverage, the shared
+tile heuristics/autotuner, and (with hypothesis) the lazy-digit
+normalization invariant that licenses the kernels' single end resolve.
+
+Kernel oracle tests run the Pallas kernels in interpret mode on CPU;
+widths above 1024 bits are slow-marked (interpret-mode tracing cost),
+matching the CI fast-subset policy.
+"""
+import numpy as np
+import pytest
+
+import repro.core.mul as M
+from repro.core import limbs as L
+from repro.kernels.common import autotune, tiling
+from repro.kernels.common.carry import normalize_static
+from repro.kernels.kara_mul import ops as kara_ops
+from repro.kernels.mxu_mul import ops as mxu_ops
+
+RNG = np.random.default_rng(7)
+
+WIDTH_MARKS = [512, 1024,
+               pytest.param(2048, marks=pytest.mark.slow),
+               pytest.param(4096, marks=pytest.mark.slow)]
+
+
+def _digits16(ints, nd):
+    return np.stack([L.int_to_limbs(v, nd, 16) for v in ints])
+
+
+# ---------------------------------------------------------------------------
+# Fused Karatsuba kernel vs Python ints (every tested width).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nbits", WIDTH_MARKS)
+def test_kara_kernel_vs_python_int(nbits):
+    nd = nbits // 16
+    xs = L.random_bigints(RNG, 5, nbits)
+    ys = L.random_bigints(RNG, 5, nbits)
+    p = np.asarray(kara_ops.kara_mul_digits(_digits16(xs, nd),
+                                            _digits16(ys, nd)))
+    assert p.shape == (5, 2 * nd)
+    for i, (x, y) in enumerate(zip(xs, ys)):
+        assert L.limbs_to_int(p[i], 16) == x * y, i
+
+
+def test_kara_kernel_pathological():
+    nbits = 1024
+    nd = nbits // 16
+    pairs = L.pathological_pairs(nbits, bits=16)
+    p = np.asarray(kara_ops.kara_mul_digits(
+        _digits16([q[0] for q in pairs], nd),
+        _digits16([q[1] for q in pairs], nd)))
+    for i, (x, y) in enumerate(pairs):
+        assert L.limbs_to_int(p[i], 16) == x * y, i
+
+
+def test_kara_kernel_vs_jnp_ref_and_batch_padding():
+    """Odd batch exercises the tile-padding path; jnp Karatsuba is the
+    secondary oracle."""
+    from repro.kernels.kara_mul import ref
+    nbits, batch = 768, 11        # 48 digits: a single-leaf (non-split) case
+    nd = nbits // 16
+    xs = L.random_bigints(RNG, batch, nbits)
+    ys = L.random_bigints(RNG, batch, nbits)
+    a, b = _digits16(xs, nd), _digits16(ys, nd)
+    got = np.asarray(kara_ops.kara_mul_digits(a, b))
+    want = np.asarray(ref.kara_mul_digits_ref(a, b))[..., : 2 * nd]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_kara_kernel_base_modes_agree():
+    nbits = 1024
+    nd = nbits // 16
+    xs = L.random_bigints(RNG, 4, nbits)
+    ys = L.random_bigints(RNG, 4, nbits)
+    a, b = _digits16(xs, nd), _digits16(ys, nd)
+    rows = np.asarray(kara_ops.kara_mul_digits(a, b, base_mode="rows"))
+    skew = np.asarray(kara_ops.kara_mul_digits(a, b, base_mode="skew"))
+    np.testing.assert_array_equal(rows, skew)
+
+
+# ---------------------------------------------------------------------------
+# MXU Toeplitz kernel vs Python ints (every tested width).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nbits", WIDTH_MARKS)
+def test_mxu_kernel_vs_python_int(nbits):
+    nd = -(-nbits // 7)
+    xs = L.random_bigints(RNG, 5, nbits)
+    ys = L.random_bigints(RNG, 5, nbits)
+    a = np.stack([L.int_to_limbs(x, nd, 7, np.int8) for x in xs])
+    b = np.stack([L.int_to_limbs(y, nd, 7, np.int8) for y in ys])
+    p = np.asarray(mxu_ops.mxu_mul_digits(a, b))
+    for i, (x, y) in enumerate(zip(xs, ys)):
+        assert L.limbs_to_int(p[i], 7) == x * y, i
+
+
+def test_mxu_kernel_limbs32_roundtrip():
+    nbits = 512
+    m = nbits // 32
+    xs = L.random_bigints(RNG, 6, nbits)
+    ys = L.random_bigints(RNG, 6, nbits)
+    p = np.asarray(mxu_ops.mxu_mul_limbs32(
+        L.ints_to_batch(xs, m), L.ints_to_batch(ys, m)))
+    for i, (x, y) in enumerate(zip(xs, ys)):
+        assert L.limbs_to_int(p[i], 32) == x * y, i
+
+
+# ---------------------------------------------------------------------------
+# core/mul.py dispatch: every branch of select_method + mul_limbs32.
+# ---------------------------------------------------------------------------
+
+def test_select_method_branches():
+    assert M.select_method(128) == "dot"
+    assert M.select_method(256) == "dot"
+    assert M.select_method(512) == "pallas"
+    assert M.select_method(1024) == "pallas_kara"
+    assert M.select_method(4096) == "pallas_kara"
+    assert M.select_method(8192) == "karatsuba"
+    assert M.select_method(1024, prefer_mxu=True) == "pallas_mxu"
+    assert M.select_method(8192, prefer_mxu=True) == "karatsuba"
+
+
+def test_select_method_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_MUL_BACKEND", "schoolbook")
+    assert M.select_method(1024) == "schoolbook"
+    monkeypatch.setenv("REPRO_MUL_BACKEND", "bogus")
+    with pytest.raises(ValueError):
+        M.select_method(1024)
+
+
+@pytest.mark.parametrize("nbits,method", [
+    (256, "dot"),            # auto at this width
+    (512, "pallas"),
+    (1024, "pallas_kara"),
+    (1024, "pallas_mxu"),
+    (1024, "auto"),          # routes to pallas_kara
+])
+def test_mul_limbs32_dispatch_exact(nbits, method):
+    m = nbits // 32
+    xs = L.random_bigints(RNG, 4, nbits)
+    ys = L.random_bigints(RNG, 4, nbits)
+    p = np.asarray(M.mul_limbs32(L.ints_to_batch(xs, m),
+                                 L.ints_to_batch(ys, m), method=method))
+    for i, (x, y) in enumerate(zip(xs, ys)):
+        assert L.limbs_to_int(p[i], 32) == x * y, (method, i)
+
+
+def test_mul_limbs32_auto_leading_batch_dims():
+    """auto + a pallas route must survive (..., m) leading batch shapes."""
+    nbits = 1024
+    m = nbits // 32
+    xs = L.random_bigints(RNG, 6, nbits)
+    ys = L.random_bigints(RNG, 6, nbits)
+    a = L.ints_to_batch(xs, m).reshape(2, 3, m)
+    b = L.ints_to_batch(ys, m).reshape(2, 3, m)
+    p = np.asarray(M.mul_limbs32(a, b, method="auto"))
+    assert p.shape == (2, 3, 2 * m)
+    flat = p.reshape(6, 2 * m)
+    for i, (x, y) in enumerate(zip(xs, ys)):
+        assert L.limbs_to_int(flat[i], 32) == x * y, i
+
+
+# ---------------------------------------------------------------------------
+# Shared tiling heuristics + the autotune cache.
+# ---------------------------------------------------------------------------
+
+def test_tiling_heuristic_bounds():
+    budget = tiling.budget_words(6)
+    for m in (1, 8, 64, 1024, 8192):
+        for batch in (1, 7, 512, 100000):
+            tb = tiling.batch_tile(m, batch, budget=budget)
+            assert tiling.MIN_TILE <= tb <= tiling.DEFAULT_MAX_TILE
+            assert tb <= max(tiling.MIN_TILE, batch)
+    # monotone: more live arrays -> no larger tile
+    assert tiling.batch_tile(64, 4096, budget=tiling.budget_words(24)) <= \
+        tiling.batch_tile(64, 4096, budget=tiling.budget_words(6))
+
+
+def test_autotune_disabled_returns_heuristic(monkeypatch):
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    calls = []
+    tb = autotune.pick_tile("t", (8, 64, 16), 32, 64,
+                            run=lambda t: calls.append(t))
+    assert tb == 32 and calls == []
+
+
+def test_autotune_sweeps_and_caches(monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    autotune.clear_cache()
+    calls = []
+
+    def fake_run(t):
+        calls.append(t)
+        import time
+        # margin must dwarf scheduler jitter on a loaded machine
+        time.sleep(0.001 if t == 16 else 0.03)    # make 16 the winner
+        return np.zeros(())
+
+    key = ("unit", 999, 16)
+    best = autotune.pick_tile("unit_op", key, 8, 999, run=fake_run, iters=1)
+    assert best == 16
+    assert set(calls) >= {8, 16}
+    assert autotune.cache_summary() == {("unit_op",) + key: 16}
+    calls.clear()
+    again = autotune.pick_tile("unit_op", key, 8, 999, run=fake_run, iters=1)
+    assert again == 16 and calls == []            # cached, no re-sweep
+    autotune.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# Lazy-digit normalization invariant (hypothesis): value preserved and
+# output normalized, for the kernel-safe static resolve at 16 and 7 bits.
+# ---------------------------------------------------------------------------
+
+def _lazy_value(cols, bits):
+    return sum(int(c) << (bits * i) for i, c in enumerate(cols))
+
+
+def _check_normalize(cols, bits, bound):
+    cols = np.asarray(cols, np.uint32)
+    want = _lazy_value(cols, bits)
+    # headroom: two extra digits always hold value < bound * S(L)
+    ext = np.concatenate([cols, np.zeros(3, np.uint32)])[None, :]
+    got = np.asarray(normalize_static(ext, bits, bound=bound))[0]
+    assert got.max(initial=0) <= (1 << bits) - 1, "not normalized"
+    assert _lazy_value(got, bits) == want, "value not preserved"
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:          # pragma: no cover - dev extra missing
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    SET = settings(max_examples=30, deadline=None)
+
+    @given(st.integers(1, 64).flatmap(lambda n: st.lists(
+        st.integers(0, 2**31 - 1), min_size=n, max_size=n)))
+    @SET
+    def test_normalize_static_invariant_16(cols):
+        _check_normalize(cols, 16, bound=1 << 31)
+
+    @given(st.integers(1, 64).flatmap(lambda n: st.lists(
+        st.integers(0, 2**24 - 1), min_size=n, max_size=n)))
+    @SET
+    def test_normalize_static_invariant_7(cols):
+        _check_normalize(cols, 7, bound=1 << 24)
+
+    @pytest.mark.slow
+    @given(st.just(None))
+    @settings(max_examples=5, deadline=None)
+    def test_normalize_static_invariant_wide(_):
+        """Above-1024-bit lazy arrays (the fused-Karatsuba regime)."""
+        n = int(RNG.integers(128, 256))           # 2048..4096 bits
+        cols = RNG.integers(0, 1 << 31, n, dtype=np.int64).astype(np.uint32)
+        _check_normalize(cols, 16, bound=1 << 31)
+
+    @given(st.integers(1, 48).flatmap(lambda n: st.lists(
+        st.integers(0, 2**31 - 1), min_size=n, max_size=n)))
+    @SET
+    def test_normalize_static_matches_while_loop(cols):
+        """The kernel-safe static resolve agrees with the jnp while-loop
+        formulation (core/mul.normalize_digits) digit-for-digit."""
+        cols = np.asarray(cols, np.uint32)
+        ext = np.concatenate([cols, np.zeros(3, np.uint32)])[None, :]
+        stat = np.asarray(normalize_static(ext, 16, bound=1 << 31))
+        loop = np.asarray(M.normalize_digits(ext, 16))
+        np.testing.assert_array_equal(stat, loop)
+else:                        # keep collection green without the dev extra
+    def test_normalize_static_invariant_16():
+        pytest.skip("hypothesis not installed")
