@@ -46,10 +46,13 @@ def run(full: bool = False, smoke: bool = False):
         key = RSA.generate_key(bits=bits, seed=bits)
         msgs = [RSA.digest_int(f"m{i}".encode(), bits) for i in range(batch)]
         md = RSA.messages_to_digits(msgs, key)
+        t_full = None
         for be in BACKENDS:
             sign = jax.jit(lambda x, k=key, b=be: RSA.sign(x, k, backend=b))
             verify = jax.jit(lambda x, k=key, b=be: RSA.verify(x, k, backend=b))
             p50, p95 = _latency_percentiles(sign, md, iters)
+            if be == "jnp":              # the default backend: reused as the
+                t_full = p50             # decrypt/full baseline below
             out.append(row(f"crypto/rsa{bits}/sign/{be}", p50 / batch,
                            f"p50_ms={p50 * 1e3:.1f} p95_ms={p95 * 1e3:.1f} "
                            f"ops_s={batch / p50:.1f}"))
@@ -57,6 +60,14 @@ def run(full: bool = False, smoke: bool = False):
             p50, p95 = _latency_percentiles(verify, sigs, iters)
             out.append(row(f"crypto/rsa{bits}/verify/{be}", p50 / batch,
                            f"p50_ms={p50 * 1e3:.1f} ops_s={batch / p50:.1f}"))
+        # decrypt: full-width ladder (== sign, already timed above) vs
+        # the CRT path (two half-size modexps + divmod-based Garner
+        # recombination)
+        dec_crt = jax.jit(lambda x, k=key: RSA.decrypt_crt(x, k))
+        t_crt, p95 = _latency_percentiles(dec_crt, md, iters)
+        out.append(row(f"crypto/rsa{bits}/decrypt/crt", t_crt / batch,
+                       f"p50_ms={t_crt * 1e3:.1f} p95_ms={p95 * 1e3:.1f} "
+                       f"speedup_vs_full={t_full / t_crt:.2f}x"))
 
     # FFDH-style: fixed generator g=2, random exponents, odd prime-sized p
     rng = np.random.default_rng(7)

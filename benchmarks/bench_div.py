@@ -1,0 +1,84 @@
+"""Division subsystem benchmark: reciprocal-divide vs the fused Knuth-D
+kernel vs the scalar small-divisor scan.
+
+The structural comparison the dispatcher encodes: at kernel-sized
+operands the schoolbook kernel's O(na*nb) VMEM-resident digit steps
+amortize better than the Newton chain's multiply launches; above the
+threshold the reciprocal path wins because its multiplies ride the
+pipeline's subquadratic backends.
+
+Emits machine-readable records (op "div"; the "recip" backend is the
+jnp-composition baseline the speedup ratios are measured against) when
+driven through benchmarks/run.py --json-out; the committed
+benchmarks/BENCH_div.json floors feed `run.py --check-baseline` in CI.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+import repro.core.div as DV
+from repro.core import limbs as L
+from benchmarks.util import record, row, time_fn
+
+BATCH = 256
+
+
+def _operands(rng, nbits, batch):
+    m = nbits // 32
+    xs = L.random_bigints(rng, batch, nbits)
+    ys = [max(1, y) for y in L.random_bigints(rng, batch, nbits - nbits // 4)]
+    import jax.numpy as jnp
+    return (jnp.asarray(L.ints_to_batch(xs, m)),
+            jnp.asarray(L.ints_to_batch(ys, m)))
+
+
+def run(full: bool = False, smoke: bool = False, records=None):
+    rng = np.random.default_rng(2)
+    out = []
+    # smoke keeps one kernel-sized width so the --check-baseline keys
+    # exist, with few reps: the schoolbook kernel's interpret-mode
+    # compile dominates the first call and is excluded by warmup.
+    if smoke:
+        sizes, batch, iters = (256,), 64, 4
+    elif full:
+        sizes, batch, iters = (256, 512, 1024, 2048), BATCH, 8
+    else:
+        sizes, batch, iters = (256, 512), BATCH, 8
+
+    for nbits in sizes:
+        a, b = _operands(rng, nbits, batch)
+        methods = ["recip"]
+        if nbits <= 512:                  # kernel trace cost explodes past
+            methods.append("schoolbook")  # this on interpret-mode runners
+        t_jnp = None
+        for method in methods:
+            fn = jax.jit(
+                lambda x, y, mm=method: DV.divmod_limbs32(x, y, method=mm))
+            t = time_fn(fn, a, b, iters=iters)
+            if method == "recip":
+                t_jnp = t
+            tag = "" if method == "recip" else \
+                f"speedup_vs_recip={t_jnp / t:.2f}x"
+            out.append(row(f"div/{nbits}b/{method}", t / batch, tag))
+            record(records, op="div", bits=nbits, batch=batch,
+                   backend=method, seconds_per_call=t,
+                   baseline_seconds=t_jnp)
+
+    # the pi workload's scalar fast path (divisor < 2**16)
+    import jax.numpy as jnp
+    m = 64
+    x = jnp.asarray(L.ints_to_batch(L.random_bigints(rng, batch, 32 * m), m))
+    from repro.core.mul import split_digits
+    xd = split_digits(x, 16)
+    fn = jax.jit(lambda v: DV.div_small(v, 12345))
+    t = time_fn(fn, xd, iters=iters)
+    out.append(row(f"div/small{32 * m}b/scan", t / batch, ""))
+    record(records, op="div", bits=32 * m, batch=batch, backend="div_small",
+           seconds_per_call=t, baseline_seconds=None)
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -2,6 +2,7 @@
 
   bench_add         -> Fig. 3(a)/(b) + Table 1  (add/sub strategies)
   bench_mul         -> Table 4 + Fig. 3(d)      (multiplication routines)
+  bench_div         -> beyond-paper             (division subsystem)
   bench_breakdown   -> Tables 1 & 3             (phase-wise attribution)
   bench_gmp         -> Fig. 4                   (GMPbench-style end-to-end)
   bench_crypto      -> Fig. 5 + latency CDFs    (OpenSSL-speed-style)
@@ -13,7 +14,7 @@ grid (slower); ``--smoke`` shrinks suites that support it to tiny sizes
 and 1-2 reps (the CI bitrot guard).  Individual suites:
 ``python -m benchmarks.bench_add``.
 
-Perf trajectory across PRs: suites that support it (add, mul) also
+Perf trajectory across PRs: suites that support it (add, mul, div) also
 produce machine-readable records.  ``--json-out DIR`` writes/merges them
 into DIR/BENCH_<suite>.json (keyed by op/bits/batch/backend, so smoke
 and full runs coexist in one file); ``--check-baseline`` compares the
@@ -78,9 +79,9 @@ def check_baseline(suite: str, records: list,
     the ratio are measured in the same run, so a slow CI machine cancels
     out); only keys present in both sets are judged.  The gate covers
     the multiply pipeline at kernel-sized operands (op "mul", >= 512
-    bits): sub-512-bit micro rows and the add strategy sweep are
-    recorded for the trajectory but their per-call times are too small
-    for run-to-run-stable ratios.
+    bits) and the division kernel (op "div", >= 256 bits): smaller micro
+    rows and the add strategy sweep are recorded for the trajectory but
+    their per-call times are too small for run-to-run-stable ratios.
     """
     path = _baseline_path(suite)
     if not os.path.exists(path):
@@ -88,10 +89,14 @@ def check_baseline(suite: str, records: list,
     with open(path) as f:
         baseline = {_key(r): r for r in json.load(f)["records"]}
     problems = []
+    min_bits = {"mul": 512, "div": 256}
     for rec in records:
-        if rec["op"] != "mul" or rec["bits"] < 512:
+        if rec["op"] not in min_bits or rec["bits"] < min_bits[rec["op"]]:
             continue
-        if "pallas" not in rec["backend"] and "kernel" not in rec["backend"]:
+        if rec["op"] == "div":
+            if rec["backend"] != "schoolbook":
+                continue
+        elif "pallas" not in rec["backend"] and "kernel" not in rec["backend"]:
             continue
         base = baseline.get(_key(rec))
         if not base or not base.get("speedup_vs_jnp") \
@@ -120,12 +125,13 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_add, bench_breakdown, bench_crypto,
-                            bench_exact_accum, bench_gmp, bench_mul,
-                            bench_roofline)
+                            bench_div, bench_exact_accum, bench_gmp,
+                            bench_mul, bench_roofline)
     suites = {
-        "add": bench_add, "mul": bench_mul, "breakdown": bench_breakdown,
-        "gmp": bench_gmp, "crypto": bench_crypto,
-        "exact_accum": bench_exact_accum, "roofline": bench_roofline,
+        "add": bench_add, "mul": bench_mul, "div": bench_div,
+        "breakdown": bench_breakdown, "gmp": bench_gmp,
+        "crypto": bench_crypto, "exact_accum": bench_exact_accum,
+        "roofline": bench_roofline,
     }
     pick = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -22,9 +22,33 @@ class MulDispatchConfig:
     fused_kara_max_bits: int = 4096   # <= : fused Karatsuba ("pallas_kara")
     mxu_max_bits: int = 4096          # <= : int8 Toeplitz ("pallas_mxu")
     kara_threshold_digits: int = 32   # leaf width inside the fused kernel
+    # Below this many independent operations a kernel launch cannot
+    # amortize (the kernels tile the BATCH axis); small batches take the
+    # jnp compositions instead: the quadratic VnC outer product while its
+    # working set stays small, jnp Karatsuba beyond.
+    kernel_min_batch: int = 8
+    small_batch_dot_max_bits: int = 4096
 
 
 MUL_DISPATCH = MulDispatchConfig()
+
+
+@dataclasses.dataclass(frozen=True)
+class DivDispatchConfig:
+    """Size thresholds for core/div.select_div_method (division front
+    door).  Up to ``schoolbook_max_bits`` the fused Knuth-D Pallas
+    kernel wins (O(na*nb) VMEM-resident digit steps, one launch); above
+    it the Newton reciprocal-divide path wins because its multiplies
+    ride the autotuned pipeline's subquadratic backends."""
+
+    schoolbook_max_bits: int = 512    # <= : Pallas Knuth-D ("schoolbook")
+    #  > : Newton reciprocal + pipeline multiplies ("recip").  The
+    # boundary matches MUL_DISPATCH.vnc_max_bits: the same regime where
+    # a single fused launch beats composition (and where the kernel's
+    # O(na*nb) unrolled step count stays cheap to compile).
+
+
+DIV_DISPATCH = DivDispatchConfig()
 
 
 @dataclasses.dataclass(frozen=True)

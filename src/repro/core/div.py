@@ -1,0 +1,597 @@
+"""Big-number division on DoT digit arrays: Newton reciprocal, divmod,
+constant-divisor division, and on-device base conversion.
+
+The inverse operation the paper stops short of: add/sub/mul/modmul cover
+the forward directions, but pi-style fixed-point series, RSA-CRT, and
+any decimal output all need division.  Mathemagix-style Barrett reduction
+(core/modular.py) and this module share one design rule: REDUCE DIVISION
+TO MULTIPLICATION, because multiplication is the primitive the unified
+pipeline (core/mul.select_method: jnp VnC / Pallas VnC / fused Karatsuba
+/ MXU Toeplitz, autotuned tiles) already makes fast.  Division then
+inherits every multiply backend for free.
+
+Three division strategies, dispatched by ``select_div_method``:
+
+  * ``small``      -- divisor is a host-side Python int < 2**digit_bits:
+                      the classic MSB-first scalar scan (``div_small``),
+                      one uint32 divide per digit.  The pi workload's
+                      fast path.
+  * ``schoolbook`` -- batched Knuth Algorithm D in a fused Pallas kernel
+                      (kernels/dot_div): digit-serial trial quotients
+                      with branch-free <=2-step add-back correction, the
+                      whole partial remainder VMEM-resident.  Wins at
+                      kernel-sized operands where a Newton iteration's
+                      multiply chain costs more than m small steps.
+  * ``recip``      -- Newton-Raphson fixed-point reciprocal
+                      (``recip_digits``) + ONE full-width multiply for
+                      the quotient + branch-free correction.  Every
+                      Newton multiply routes through mul_limbs32's
+                      ``auto`` dispatch, so large divisions ride the
+                      fused Karatsuba kernel / jnp Karatsuba exactly
+                      like large multiplies do (Kouya's branch-free
+                      reciprocal structure, data-parallel over the
+                      batch).
+
+Correctness contract: quotient/remainder are EXACT (``q*b + r == a`` and
+``0 <= r < b``) for every b >= 1; correction runs as masked while-loops
+whose trip count is the (small, bounded) reciprocal error, so no error
+analysis is load-bearing for exactness -- only for speed.  ``b == 0``
+lanes are undefined (guarded so the correction loops still terminate).
+
+Digit conventions match core/mul.py: little-endian, last axis, uint32
+storage, normalized digits < 2**digit_bits unless noted.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import limbs as L
+from repro.core.mul import (DIGIT_BITS, join_digits, mul_limbs32,
+                            normalize_digits, split_digits)
+
+U32 = jnp.uint32
+
+DIV_METHODS = ("schoolbook", "recip")
+
+
+# ---------------------------------------------------------------------------
+# Digit-domain add/sub/compare (radix-complement; the ONE home of the
+# lazy-add + deferred-carry-resolve idiom that pi.py and modular.py used
+# to hand-roll separately).
+# ---------------------------------------------------------------------------
+
+def _mask(digit_bits: int) -> jnp.ndarray:
+    return jnp.uint32((1 << digit_bits) - 1)
+
+
+def _pad_to(x: jax.Array, n: int) -> jax.Array:
+    m = x.shape[-1]
+    if m == n:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, n - m)])
+
+
+def add_digits(a: jax.Array, b: jax.Array,
+               digit_bits: int = DIGIT_BITS) -> jax.Array:
+    """a + b on equal-width normalized digit arrays, same width (the
+    carry out of the top digit, if any, is dropped -- size the arrays)."""
+    return normalize_digits(a + b, digit_bits)
+
+
+def sub_digits(a: jax.Array, b: jax.Array,
+               digit_bits: int = DIGIT_BITS) -> Tuple[jax.Array, jax.Array]:
+    """(a - b mod B**n, ge) on equal-width normalized digit arrays.
+
+    ge is (...,) uint32, 1 iff a >= b (the radix-complement carry out);
+    the difference is the true a - b exactly when ge == 1.
+    """
+    n = a.shape[-1]
+    mask = _mask(digit_bits)
+    comp = (mask - b) & mask
+    s = _pad_to(a + comp, n + 1).at[..., 0].add(1)     # lazy, < 2**(d+1)+1
+    s = normalize_digits(s, digit_bits)
+    return s[..., :n], s[..., n]
+
+
+def ge_digits(a: jax.Array, b: jax.Array,
+              digit_bits: int = DIGIT_BITS) -> jax.Array:
+    """a >= b on equal-width normalized digit arrays; (...,) uint32 0/1."""
+    return sub_digits(a, b, digit_bits)[1]
+
+
+# ---------------------------------------------------------------------------
+# Per-element dynamic shifts (normalization).  s varies across the batch,
+# so digit moves are a take_along_axis roll and bit moves are uint32
+# shifts by per-element amounts -- both plain VPU ops, no host round-trip.
+# ---------------------------------------------------------------------------
+
+def bit_length_digits(x: jax.Array, digit_bits: int = DIGIT_BITS) -> jax.Array:
+    """Bit length of each batched digit-array value; (...,) uint32.
+
+    bitlen(digit) = sum_k [digit >= 2**k] (branch-free, d static steps);
+    the value's bit length is the max over nonzero digits of
+    (digit_index * d + bitlen).  Returns 0 for zero values.
+    """
+    x = jnp.asarray(x, U32)
+    bl = jnp.zeros(x.shape, U32)
+    for k in range(digit_bits):
+        bl = bl + (x >= jnp.uint32(1 << k)).astype(U32)
+    pos = jnp.asarray(np.arange(x.shape[-1], dtype=np.uint32) * digit_bits)
+    return jnp.max(jnp.where(x > 0, bl + pos, jnp.uint32(0)), axis=-1)
+
+
+def shift_left_bits(x: jax.Array, s: jax.Array,
+                    digit_bits: int = DIGIT_BITS) -> jax.Array:
+    """x << s per batch element, within the (fixed) digit width.
+
+    s: (...,) uint32 with 0 <= s < width*d; callers guarantee the shifted
+    value still fits (bits shifted past the top are lost).
+    """
+    x = jnp.asarray(x, U32)
+    n = x.shape[-1]
+    d = jnp.uint32(digit_bits)
+    sd = (s // d).astype(jnp.int32)[..., None]
+    sb = (s % d).astype(U32)[..., None]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    src = pos - sd                                     # digit roll up by sd
+    g = jnp.take_along_axis(
+        jnp.broadcast_to(x, sd.shape[:-1] + (n,)),
+        jnp.clip(src, 0, n - 1), axis=-1)
+    g = jnp.where(src >= 0, g, jnp.uint32(0))
+    prev = jnp.concatenate(
+        [jnp.zeros(g.shape[:-1] + (1,), U32), g[..., :-1]], axis=-1)
+    # sb == 0: prev >> d vanishes (digits < 2**d), no special case needed
+    return ((g << sb) & _mask(digit_bits)) | (prev >> (d - sb))
+
+
+def shift_right_bits(x: jax.Array, s: jax.Array,
+                     digit_bits: int = DIGIT_BITS) -> jax.Array:
+    """x >> s per batch element (bits shifted out are dropped)."""
+    x = jnp.asarray(x, U32)
+    n = x.shape[-1]
+    d = jnp.uint32(digit_bits)
+    sd = (s // d).astype(jnp.int32)[..., None]
+    sb = (s % d).astype(U32)[..., None]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    src = pos + sd                                     # digit roll down by sd
+    g = jnp.take_along_axis(
+        jnp.broadcast_to(x, sd.shape[:-1] + (n,)),
+        jnp.clip(src, 0, n - 1), axis=-1)
+    g = jnp.where(src <= n - 1, g, jnp.uint32(0))
+    nxt = jnp.concatenate(
+        [g[..., 1:], jnp.zeros(g.shape[:-1] + (1,), U32)], axis=-1)
+    return (g >> sb) | ((nxt << (d - sb)) & _mask(digit_bits))
+
+
+# ---------------------------------------------------------------------------
+# The multiply every division step rides on: route digit arrays through
+# mul_limbs32(method="auto") so division inherits the whole unified
+# pipeline (VnC / fused Karatsuba / MXU kernels + autotune cache).
+# ---------------------------------------------------------------------------
+
+def mul_digits_via_pipeline(a: jax.Array, b: jax.Array,
+                            digit_bits: int = DIGIT_BITS) -> jax.Array:
+    """(..., m) x (..., m) normalized digits -> (..., 2m) full product,
+    computed by packing to 32-bit limbs and dispatching through
+    core/mul.select_method (the autotuned multiply pipeline)."""
+    m = a.shape[-1]
+    # the Pallas entry points flatten leading axes per operand, so an
+    # unbatched constant (e.g. a reciprocal row) must be broadcast to
+    # the batch shape BEFORE dispatch, not left to jnp broadcasting
+    lead = jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1])
+    a = jnp.broadcast_to(a, lead + (m,))
+    b = jnp.broadcast_to(b, lead + (m,))
+    m32 = -(-(m * digit_bits) // 32)
+    a32 = join_digits(a, digit_bits, m32)
+    b32 = join_digits(b, digit_bits, m32)
+    p32 = mul_limbs32(a32, b32, method="auto")         # (..., 2*m32)
+    return split_digits(p32, digit_bits)[..., : 2 * m]
+
+
+def _mul_equalized(a: jax.Array, b: jax.Array,
+                   digit_bits: int = DIGIT_BITS) -> jax.Array:
+    """Pad to a common width and multiply via the pipeline; (..., wa+wb)."""
+    wa, wb = a.shape[-1], b.shape[-1]
+    w = max(wa, wb)
+    p = mul_digits_via_pipeline(_pad_to(a, w), _pad_to(b, w), digit_bits)
+    return p[..., : wa + wb]
+
+
+# ---------------------------------------------------------------------------
+# Small-divisor fast path (the pi workload): divisor is a host Python int
+# < 2**digit_bits, one uint32 divide per digit, MSB-first scan.
+# ---------------------------------------------------------------------------
+
+def div_small(x: jax.Array, s, digit_bits: int = DIGIT_BITS) -> jax.Array:
+    """Exact floor-division of (..., m) normalized digits by a small
+    positive int s < 2**digit_bits: scan from the most significant digit
+    with a running remainder (r*B + d < 2**32 stays exact in uint32)."""
+    s = jnp.uint32(s)
+    bits = jnp.uint32(digit_bits)
+
+    def step(r, d):
+        cur = (r << bits) | d
+        q = cur // s
+        return cur - q * s, q
+
+    x_t = jnp.moveaxis(jnp.asarray(x, U32), -1, 0)[::-1]      # MSB first
+    _, q_t = jax.lax.scan(step, jnp.zeros(x.shape[:-1], U32), x_t)
+    return jnp.moveaxis(q_t[::-1], 0, -1)
+
+
+# ---------------------------------------------------------------------------
+# Newton-Raphson reciprocal (precision doubling).
+# ---------------------------------------------------------------------------
+
+def recip_digits(b_norm: jax.Array,
+                 digit_bits: int = DIGIT_BITS) -> jax.Array:
+    """v ~= floor(D**(2*nb) / b_norm) for top-bit-normalized divisors.
+
+    b_norm: (..., nb) normalized digits with the top bit set, i.e. value
+    in [D**nb / 2, D**nb).  Returns (..., nb + 1) digits.
+
+    Precision doubling: level p holds v_p ~= D**(2p) / Bp where Bp is the
+    top p digits of b_norm (a STATIC slice, thanks to normalization --
+    this is what makes the divide-and-conquer shapes trace-time static).
+    One exact-integer Newton step per level:
+
+        x   = v_p * D**(q-p)                  (shift; q = min(2p, nb))
+        v_q = floor(x * (2*D**(2q) - x*Bq) / D**(2q))
+
+    Both multiplies are exact and route through the multiply pipeline;
+    only the final floor truncates, so by the parabola bound
+    x*(2*T - x*Bq)/T <= T/Bq the invariant v_p <= D**(2p)/Bp holds at
+    every level: the reciprocal NEVER overestimates, which is what lets
+    divmod correct with forward (add-only) steps.  Total multiply work is
+    a geometric series ~= 3 full-width products.
+    """
+    nb = b_norm.shape[-1]
+    D = 1 << digit_bits
+    b_norm = jnp.asarray(b_norm, U32)
+    lead = b_norm.shape[:-1]
+
+    # base: p = 1.  v1 = floor((D**2 - 1) / B1) in [D+1, 2D-1]; the -1
+    # (vs true D**2) keeps the numerator in uint32 and only ever rounds
+    # down (error <= 1 ulp, washed out by the first doubling).
+    v = jnp.uint32(D * D - 1) // b_norm[..., nb - 1:nb]
+    v = jnp.concatenate([v & _mask(digit_bits),
+                         v >> jnp.uint32(digit_bits)], axis=-1)  # (..., 2)
+    def newton_step(v, p, q):
+        Bq = b_norm[..., nb - q:]                      # (..., q)
+        x = jnp.concatenate(
+            [jnp.zeros(lead + (q - p,), U32), v], axis=-1)  # (..., q+1)
+        t1 = _mul_equalized(x, Bq, digit_bits)         # (..., 2q+1), < 2*D**2q
+        two = jnp.zeros(lead + (2 * q + 1,), U32).at[..., 2 * q].set(2)
+        u, _ = sub_digits(two, _pad_to(t1, 2 * q + 1), digit_bits)
+        prod = _mul_equalized(x, u, digit_bits)        # (..., 3q+2)
+        return prod[..., 2 * q: 3 * q + 1]             # floor(x*u / D**2q)
+
+    p = 1
+    while p < nb:
+        q = min(2 * p, nb)
+        v = newton_step(v, p, q)
+        p = q
+    # one full-precision polish step: each doubling level's floor adds
+    # ~1 ulp of undershoot, which COMPOUNDS quadratically up the ladder
+    # (tens of ulps by 512 bits).  A final same-precision iteration
+    # squares the accumulated error back below a few ulps, keeping the
+    # divmod correction loop's trip count O(1).
+    if nb > 1:
+        v = newton_step(v, nb, nb)
+    return v                                           # (..., nb+1)
+
+
+def recip_limbs32(b_limbs: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Batched Newton reciprocal on 32-bit limb arrays.
+
+    Returns (v_limbs, shift): with N = 32*mb total bits and the
+    per-element shift s normalizing b (b << s has its top bit at N-1),
+    v ~= floor(2**(2N) / (b << s)) in (mb + 1) limbs.  The approximation
+    never overestimates and undershoots by at most a few units --
+    exactness is restored by divmod's correction loop, which is why the
+    pair (v, shift) is all a caller needs to divide by b with one
+    multiply per quotient.
+    """
+    b = jnp.asarray(b_limbs, U32)
+    mb = b.shape[-1]
+    b_d = split_digits(b, DIGIT_BITS)
+    nbd = b_d.shape[-1]
+    s = jnp.uint32(nbd * DIGIT_BITS) - bit_length_digits(b_d, DIGIT_BITS)
+    b_n = shift_left_bits(b_d, s, DIGIT_BITS)
+    v = recip_digits(b_n, DIGIT_BITS)                  # (..., nbd+1)
+    m_out = mb + 1
+    return join_digits(_pad_to(v, 2 * m_out), DIGIT_BITS, m_out), s
+
+
+# ---------------------------------------------------------------------------
+# divmod: quotient = one multiply by the reciprocal, remainder = one
+# multiply back + branch-free masked correction.
+# ---------------------------------------------------------------------------
+
+def _masked_sub(x: jax.Array, y: jax.Array, mask: jax.Array,
+                digit_bits: int) -> jax.Array:
+    """x - y on lanes where mask == 1 (callers guarantee x >= y there)."""
+    return sub_digits(x, y * mask[..., None], digit_bits)[0]
+
+
+def _plus_one(q: jax.Array, mask: jax.Array, digit_bits: int) -> jax.Array:
+    return normalize_digits(q.at[..., 0].add(mask), digit_bits)
+
+
+def _minus_one(q: jax.Array, mask: jax.Array, digit_bits: int) -> jax.Array:
+    one = jnp.zeros_like(q).at[..., 0].set(1)
+    return _masked_sub(q, one, mask, digit_bits)
+
+
+def _correct_qr(a_c, b_c, q, p, digit_bits):
+    """Exact (q, r) from an approximate quotient q with p = q*b.
+
+    a_c, b_c, p: equal-width digit arrays; q any width.  Two masked
+    while-loops: pull q down while q*b > a (never entered when q came
+    from the non-overestimating Newton reciprocal; kept for safety),
+    then push q up while a - q*b >= b.  Loop trip count == per-lane
+    quotient error; zero-divisor lanes are masked out so the loops
+    terminate (their q/r are undefined).
+    """
+    bnz = (jnp.max(b_c, axis=-1) > 0).astype(U32)
+
+    def cond_hi(st):
+        q, p = st
+        over = (1 - ge_digits(a_c, p, digit_bits)) * bnz
+        return jnp.any(over == 1)
+
+    def body_hi(st):
+        q, p = st
+        over = (1 - ge_digits(a_c, p, digit_bits)) * bnz
+        return _minus_one(q, over, digit_bits), \
+            _masked_sub(p, b_c, over, digit_bits)
+
+    q, p = jax.lax.while_loop(cond_hi, body_hi, (q, p))
+    r, _ = sub_digits(a_c, p, digit_bits)
+
+    def cond_lo(st):
+        q, r = st
+        under = ge_digits(r, b_c, digit_bits) * bnz
+        return jnp.any(under == 1)
+
+    def body_lo(st):
+        q, r = st
+        under = ge_digits(r, b_c, digit_bits) * bnz
+        return _plus_one(q, under, digit_bits), \
+            _masked_sub(r, b_c, under, digit_bits)
+
+    return jax.lax.while_loop(cond_lo, body_lo, (q, r))
+
+
+def divmod_recip_digits(a: jax.Array, b: jax.Array,
+                        digit_bits: int = DIGIT_BITS
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Reciprocal-divide: (..., na) // (..., nb) -> ((..., na) q, (..., nb) r).
+
+    Normalize b to the array top (per-element shift s), shift a by the
+    same s (scaling numerator and denominator preserves the quotient),
+    take q_hat = floor(A * v / D**(2nw)) with the Newton reciprocal v,
+    and correct exactly.  One reciprocal + two full multiplies.
+
+    The reciprocal precision must cover the QUOTIENT width, not just
+    the divisor: with nw fractional digits the estimate error is
+    ~ delta * A / D**(2nw) <= delta * D**(na - nw), so a reciprocal at
+    divisor width alone leaves a D**(na-nb)-sized error for wide
+    dividends over narrow divisors -- astronomically many +1 correction
+    trips.  nw = max(na, nb) bounds the error by the reciprocal's own
+    few-ulp undershoot for every shape; when na <= nb this pads
+    nothing.  (The padding is a LOW-side digit shift of the normalized
+    divisor, so the top bit stays at the array top and recip_digits'
+    contract is unchanged.)
+    """
+    a = jnp.asarray(a, U32)
+    b = jnp.asarray(b, U32)
+    na, nb = a.shape[-1], b.shape[-1]
+    lead = jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1])
+    a = jnp.broadcast_to(a, lead + (na,))
+    b = jnp.broadcast_to(b, lead + (nb,))
+    nw = max(na, nb)
+
+    s = jnp.uint32(nb * digit_bits) - bit_length_digits(b, digit_bits)
+    b_norm = shift_left_bits(b, s, digit_bits)
+    # top-aligned widening: value b_norm * D**(nw-nb), top bit preserved
+    b_pad = jnp.concatenate(
+        [jnp.zeros(lead + (nw - nb,), U32), b_norm], axis=-1)
+    a_s = shift_left_bits(_pad_to(a, na + nb), s, digit_bits)
+    A = jnp.concatenate(
+        [jnp.zeros(lead + (nw - nb,), U32), a_s], axis=-1)  # (..., na+nw)
+    v = recip_digits(b_pad, digit_bits)                # (..., nw+1)
+
+    prod = _mul_equalized(A, v, digit_bits)            # (..., na+2nw+1)
+    q = prod[..., 2 * nw: 2 * nw + na]                 # q_hat <= q < D**na
+
+    wc = nw + 1                  # covers a (< D**na) AND b (< D**nb)
+    p = _mul_equalized(q, b, digit_bits)[..., :wc]     # q_hat*b <= a < D**na
+    q, r = _correct_qr(_pad_to(a, wc), _pad_to(b, wc), q, p, digit_bits)
+    return q, r[..., :nb]
+
+
+def select_div_method(nbits_a: int, nbits_b: int, batch: int = 1) -> str:
+    """Size-based division dispatch (configs/dot_bignum.DIV_DISPATCH).
+
+    Knuth-D in the fused Pallas kernel ("schoolbook") up to the config
+    threshold: its O(na*nb) digit steps stay VMEM-resident and beat the
+    Newton chain's multiply launches at small widths.  Above it,
+    reciprocal-divide ("recip"): the Newton multiplies route through the
+    autotuned pipeline, so asymptotics follow the multiply backends.
+    The environment override REPRO_DIV_BACKEND wins over everything.
+
+    Batch awareness mirrors mul.select_method: a kernel launch only
+    amortizes over the batch axis, so tiny batches take the reciprocal
+    path, whose multiplies then themselves dispatch to the small-batch
+    jnp compositions.
+    """
+    import os
+
+    from repro.configs.dot_bignum import DIV_DISPATCH, MUL_DISPATCH
+
+    env = os.environ.get("REPRO_DIV_BACKEND", "")
+    if env:
+        if env not in DIV_METHODS:
+            raise ValueError(
+                f"REPRO_DIV_BACKEND={env!r}; choose from {DIV_METHODS}")
+        return env
+    if batch < MUL_DISPATCH.kernel_min_batch:
+        return "recip"
+    if max(nbits_a, nbits_b) <= DIV_DISPATCH.schoolbook_max_bits:
+        return "schoolbook"
+    return "recip"
+
+
+def divmod_digits(a: jax.Array, b: jax.Array,
+                  digit_bits: int = DIGIT_BITS, method: str = "auto"
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Exact (floor quotient, remainder) on normalized digit arrays.
+
+    a: (..., na), b: (..., nb) with broadcastable leading shapes; returns
+    ((..., na), (..., nb)).  Invariant: q*b + r == a and 0 <= r < b for
+    every lane with b >= 1 (b == 0 lanes are undefined).  The Pallas
+    schoolbook kernel only supports the native 16-bit digits; other
+    digit_bits always take the reciprocal path.
+    """
+    if method == "auto":
+        batch = 1
+        for d in jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1]):
+            batch *= int(d)
+        method = select_div_method(a.shape[-1] * digit_bits,
+                                   b.shape[-1] * digit_bits, batch)
+    if method == "schoolbook" and digit_bits != 16:
+        method = "recip"
+    if method == "schoolbook":
+        from repro.kernels.dot_div import ops as _dops
+        a2 = jnp.asarray(a, U32)
+        b2 = jnp.asarray(b, U32)
+        lead = jnp.broadcast_shapes(a2.shape[:-1], b2.shape[:-1])
+        na, nb = a2.shape[-1], b2.shape[-1]
+        a2 = jnp.broadcast_to(a2, lead + (na,)).reshape((-1, na))
+        b2 = jnp.broadcast_to(b2, lead + (nb,)).reshape((-1, nb))
+        q, r = _dops.dot_divmod_digits(a2, b2)
+        return q.reshape(lead + (na,)), r.reshape(lead + (nb,))
+    if method != "recip":
+        raise ValueError(f"unknown division method {method!r}")
+    return divmod_recip_digits(a, b, digit_bits)
+
+
+def divmod_limbs32(a_limbs: jax.Array, b_limbs: jax.Array,
+                   method: str = "auto") -> Tuple[jax.Array, jax.Array]:
+    """(..., ma) // (..., mb) uint32 limbs -> ((..., ma) q, (..., mb) r).
+
+    The GMP/OpenSSL-facing entry point (saturated radix in/out, digit
+    radix inside -- same packing contract as mul_limbs32).
+    """
+    ma = a_limbs.shape[-1]
+    mb = b_limbs.shape[-1]
+    a_d = split_digits(jnp.asarray(a_limbs, U32), DIGIT_BITS)
+    b_d = split_digits(jnp.asarray(b_limbs, U32), DIGIT_BITS)
+    q_d, r_d = divmod_digits(a_d, b_d, DIGIT_BITS, method)
+    return (join_digits(q_d, DIGIT_BITS, ma),
+            join_digits(r_d, DIGIT_BITS, mb))
+
+
+@functools.partial(jax.jit, static_argnames=("method",))
+def divmod_jit(a_limbs: jax.Array, b_limbs: jax.Array, method: str = "auto"):
+    return divmod_limbs32(a_limbs, b_limbs, method)
+
+
+# ---------------------------------------------------------------------------
+# Constant (host-known) divisors: the reciprocal is EXACT Python-int
+# math, so the quotient needs one multiply and at most ONE fix-up step
+# (branch-free select, no loop).  This is the base-conversion workhorse.
+# ---------------------------------------------------------------------------
+
+def divmod_const(x: jax.Array, c: int,
+                 digit_bits: int = DIGIT_BITS) -> Tuple[jax.Array, jax.Array]:
+    """(x // c, x % c) for a host-side Python int divisor c >= 1.
+
+    v = floor(D**m / c) is exact, so q_hat = floor(x*v / D**m) is q or
+    q-1 (never more): one conditional add/sub pair finishes the job.
+    Returns (q: (..., m), r: (..., nc)) with nc = digit width of c.
+    """
+    assert c >= 1
+    x = jnp.asarray(x, U32)
+    m = x.shape[-1]
+    D = 1 << digit_bits
+    nc = max(1, -(-c.bit_length() // digit_bits))
+    assert c < D ** m, "divisor wider than the dividend array"
+    v_int = D ** m // c
+    v = jnp.asarray(L.int_to_limbs(v_int, m + 1, digit_bits))
+    c_arr = jnp.asarray(L.int_to_limbs(c, nc, digit_bits))
+
+    q = _mul_equalized(x, v, digit_bits)[..., m: 2 * m]
+    p = _mul_equalized(q, c_arr, digit_bits)[..., : m + 1]
+    r, _ = sub_digits(_pad_to(x, m + 1), p, digit_bits)
+    c_w = jnp.broadcast_to(_pad_to(c_arr, m + 1), r.shape)
+    under = ge_digits(r, c_w, digit_bits)              # q_hat == q - 1
+    q = _plus_one(q, under, digit_bits)
+    r = _masked_sub(r, c_w, under, digit_bits)
+    return q, r[..., :nc]
+
+
+# ---------------------------------------------------------------------------
+# On-device base conversion: limbs -> decimal digits by divide-and-
+# conquer divmod on 10**k chunks (subquadratic: both halves shrink, and
+# every divmod is one pipeline multiply thanks to exact reciprocals).
+# ---------------------------------------------------------------------------
+
+DEC_CHUNK = 4                       # decimal digits per leaf (10**4 < 2**14)
+
+
+def _dec_width(n_dec: int, digit_bits: int) -> int:
+    """Digits needed to hold any value < 10**n_dec."""
+    return max(1, -(-((10 ** n_dec - 1).bit_length()) // digit_bits))
+
+
+def to_decimal_digits(x: jax.Array, n_dec: int,
+                      digit_bits: int = DIGIT_BITS) -> jax.Array:
+    """(..., m) digit-array values < 10**n_dec -> (..., n_dec) decimal
+    digits, MOST significant first, entirely on device.
+
+    Divide-and-conquer: split by divmod_const(x, 10**(4*half)) until each
+    chunk holds 4 decimal digits, then extract them with elementwise
+    uint32 ops.  T(n) = 2 T(n/2) + mul(n): subquadratic with any
+    subquadratic multiply backend (the divisors are host-known powers of
+    ten, so every split is ONE pipeline multiply -- see divmod_const).
+    """
+    x = jnp.asarray(x, U32)
+    nch = -(-n_dec // DEC_CHUNK)
+
+    def leaf(v: jax.Array) -> jax.Array:
+        # v: (..., w) digits, value < 10**4 < 2**14: collapse to scalar
+        val = jnp.zeros(v.shape[:-1], U32)
+        for i in range(v.shape[-1]):
+            val = val | (v[..., i] << jnp.uint32(digit_bits * i))
+        outs = [(val // jnp.uint32(10 ** (DEC_CHUNK - 1 - j)))
+                % jnp.uint32(10) for j in range(DEC_CHUNK)]
+        return jnp.stack(outs, axis=-1)                # (..., 4) MSB first
+
+    def rec(v: jax.Array, chunks: int) -> jax.Array:
+        if chunks == 1:
+            return leaf(v)
+        lo_n = chunks // 2
+        hi_n = chunks - lo_n
+        q, r = divmod_const(v, 10 ** (DEC_CHUNK * lo_n), digit_bits)
+        q = q[..., : _dec_width(DEC_CHUNK * hi_n, digit_bits)]
+        r = _pad_to(r, _dec_width(DEC_CHUNK * lo_n, digit_bits))
+        return jnp.concatenate([rec(q, hi_n), rec(r, lo_n)], axis=-1)
+
+    dec = rec(x[..., : _dec_width(DEC_CHUNK * nch, digit_bits)]
+              if x.shape[-1] >= _dec_width(DEC_CHUNK * nch, digit_bits)
+              else _pad_to(x, _dec_width(DEC_CHUNK * nch, digit_bits)), nch)
+    return dec[..., DEC_CHUNK * nch - n_dec:]
+
+
+def to_decimal_limbs32(x_limbs: jax.Array, n_dec: int) -> jax.Array:
+    """32-bit limb entry point of to_decimal_digits."""
+    return to_decimal_digits(
+        split_digits(jnp.asarray(x_limbs, U32), DIGIT_BITS), n_dec,
+        DIGIT_BITS)

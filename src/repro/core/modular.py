@@ -25,7 +25,13 @@ Every public op takes ``backend`` (default: the module default, "jnp"):
   * ``jnp``       -- the pure-jnp formulation below (HBM round-trips the
     accumulator every CIOS scan step),
   * ``pallas``    -- the fused VMEM-resident kernel in
-    kernels/dot_modmul (interpret mode on CPU, tiled on TPU).
+    kernels/dot_modmul (interpret mode on CPU, tiled on TPU),
+  * ``barrett``   -- Barrett reduction (Mathemagix-style): precomputed
+    mu = floor(B**2m / n), reduction = two pipeline multiplies + a
+    bounded correction.  No Montgomery form, no parity restriction --
+    the ONLY backend that handles EVEN moduli.  Montgomery setup
+    rejects even n with a pointer here; mod_mul/mod_exp auto-route a
+    BarrettCtx to this backend.
 
 core/rsa.py, examples/rsa_crypto.py and benchmarks/bench_crypto.py all
 route through this one API, so backends can be compared head-to-head.
@@ -33,6 +39,7 @@ route through this one API, so backends can be compared head-to-head.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -46,7 +53,7 @@ DIGIT_BITS = 16
 BASE = 1 << DIGIT_BITS
 MASK = jnp.uint32(BASE - 1)
 
-BACKENDS = ("reference", "jnp", "pallas")
+BACKENDS = ("reference", "jnp", "pallas", "barrett")
 _DEFAULT_BACKEND = "jnp"
 
 
@@ -62,10 +69,15 @@ def get_default_backend() -> str:
     return _DEFAULT_BACKEND
 
 
-def _resolve_backend(backend: str | None) -> str:
+def _resolve_backend(backend: str | None, ctx=None) -> str:
     backend = backend or _DEFAULT_BACKEND
     if backend not in BACKENDS:
         raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
+    # Even moduli carry a BarrettCtx; the Montgomery backends cannot
+    # serve them, so auto-route to Barrett instead of failing deep in
+    # a kernel (the "reference" oracle handles any parity and is kept).
+    if backend in ("jnp", "pallas") and isinstance(ctx, BarrettCtx):
+        return "barrett"
     return backend
 
 
@@ -81,7 +93,11 @@ class MontCtx:
 
 
 def mont_setup(n: int, nbits: int | None = None) -> MontCtx:
-    assert n % 2 == 1 and n > 2, "Montgomery requires an odd modulus"
+    if n % 2 == 0 or n <= 2:
+        raise ValueError(
+            f"Montgomery arithmetic requires an odd modulus > 2, got "
+            f"n % 2 == {n % 2}; use barrett_setup / mod_setup (Barrett "
+            f"reduction handles even moduli)")
     nbits = nbits or n.bit_length()
     m = -(-nbits // DIGIT_BITS)
     R = 1 << (DIGIT_BITS * m)
@@ -92,6 +108,126 @@ def mont_setup(n: int, nbits: int | None = None) -> MontCtx:
         r2_digits=L.int_to_limbs((R * R) % n, m, DIGIT_BITS),
         one_digits=L.int_to_limbs(R % n, m, DIGIT_BITS),
     )
+
+
+@dataclasses.dataclass(frozen=True)
+class BarrettCtx:
+    """Host-side Barrett context for ANY modulus n >= 2 (even or odd).
+
+    mu = floor(B**2m / n) is the fixed-point reciprocal that turns
+    reduction into two multiplies (van der Hoeven & Lecerf's SIMD-
+    friendly companion to vectorized multiplication).
+    """
+    m: int                       # digits
+    n: int                       # python int modulus
+    n_digits: np.ndarray         # (m,)
+    mu_digits: np.ndarray        # (m + 2,): mu = floor(B**2m / n)
+
+
+def barrett_setup(n: int, nbits: int | None = None) -> BarrettCtx:
+    if n < 2:
+        raise ValueError("Barrett reduction requires a modulus >= 2")
+    nbits = nbits or n.bit_length()
+    m = -(-nbits // DIGIT_BITS)
+    if n < BASE ** (m - 1):
+        # the q_hat <= q <= q_hat + 2 bound (and the m+2-digit mu
+        # sizing) both need the top declared digit nonzero
+        raise ValueError(
+            f"barrett_setup: nbits={nbits} over-declares the modulus "
+            f"(n has {n.bit_length()} bits); Barrett's trial-quotient "
+            f"bound needs the top digit nonzero -- pass nbits <= "
+            f"{(-(-n.bit_length() // DIGIT_BITS)) * DIGIT_BITS}")
+    mu = (BASE ** (2 * m)) // n
+    return BarrettCtx(
+        m=m, n=n,
+        n_digits=L.int_to_limbs(n, m, DIGIT_BITS),
+        mu_digits=L.int_to_limbs(mu, m + 2, DIGIT_BITS),
+    )
+
+
+def mod_setup(n: int, nbits: int | None = None):
+    """Context for a modulus of either parity: MontCtx for odd n (the
+    fast fused-kernel path), BarrettCtx for even n (auto-routed to the
+    Barrett backend by mod_mul / mod_exp)."""
+    if n % 2 == 1 and n > 2:
+        return mont_setup(n, nbits)
+    return barrett_setup(n, nbits)
+
+
+@functools.lru_cache(maxsize=64)
+def _barrett_from_modulus(n: int, nbits: int) -> BarrettCtx:
+    return barrett_setup(n, nbits)
+
+
+def _as_barrett(ctx) -> BarrettCtx:
+    if isinstance(ctx, BarrettCtx):
+        return ctx
+    return _barrett_from_modulus(ctx.n, ctx.m * DIGIT_BITS)
+
+
+def _barrett_reduce(x: jax.Array, ctx: BarrettCtx) -> jax.Array:
+    """x mod n for (..., 2m) normalized digits with x < n * B**m
+    (anything the product of two residues can produce).
+
+    q_hat = floor(floor(x / B**(m-1)) * mu / B**(m+1)) underestimates
+    q = floor(x / n) by at most 2 (classic Barrett bound; n >= B**(m-1)
+    holds by construction of m), so r = x - q_hat*n < 3n and a masked
+    while-loop finishes in <= 2 trips.  Both multiplies route through
+    the autotuned pipeline (core/div.mul_digits_via_pipeline).
+    """
+    from repro.core import div as DV
+
+    m = ctx.m
+    x = jnp.asarray(x, U32)
+    mu = jnp.asarray(ctx.mu_digits, U32)
+    n_dig = jnp.asarray(ctx.n_digits, U32)
+
+    t = x[..., m - 1:]                                 # floor(x / B**(m-1))
+    q = DV._mul_equalized(t, mu, DIGIT_BITS)[..., m + 1: 2 * m + 2]
+    p = DV._mul_equalized(q, n_dig, DIGIT_BITS)[..., : 2 * m]   # q_hat*n <= x
+    r, _ = DV.sub_digits(x, p, DIGIT_BITS)
+    r = r[..., : m + 1]                                # r < 3n < B**(m+1)
+    n_w = jnp.broadcast_to(DV._pad_to(n_dig, m + 1), r.shape)
+
+    def cond(r):
+        return jnp.any(DV.ge_digits(r, n_w, DIGIT_BITS) == 1)
+
+    def body(r):
+        over = DV.ge_digits(r, n_w, DIGIT_BITS)
+        return DV.sub_digits(r, n_w * over[..., None], DIGIT_BITS)[0]
+
+    r = jax.lax.while_loop(cond, body, r)
+    return r[..., :m]
+
+
+def barrett_mod_mul(a: jax.Array, b: jax.Array, ctx) -> jax.Array:
+    """(a * b) mod n on (..., m) digit arrays (no Montgomery form)."""
+    from repro.core import div as DV
+
+    bctx = _as_barrett(ctx)
+    x = DV._mul_equalized(jnp.asarray(a, U32), jnp.asarray(b, U32),
+                          DIGIT_BITS)                  # (..., 2m)
+    return _barrett_reduce(x, bctx)
+
+
+def _barrett_mod_exp(base: jax.Array, exp_bits: jax.Array, ctx) -> jax.Array:
+    """Constant-time square-and-multiply ladder on plain residues
+    (Barrett needs no domain transform: square always, multiply always,
+    select by the exponent bit)."""
+    bctx = _as_barrett(ctx)
+    x = jnp.asarray(base, U32)
+    res0 = jnp.zeros_like(x).at[..., 0].set(1)
+    eb = jnp.asarray(exp_bits, U32)
+    nbits = eb.shape[-1]
+    eb_t = jnp.moveaxis(jnp.broadcast_to(eb, x.shape[:-1] + (nbits,)), -1, 0)
+
+    def step(res, bit):
+        sq = barrett_mod_mul(res, res, bctx)
+        mul = barrett_mod_mul(sq, x, bctx)
+        return jnp.where((bit == 1)[..., None], mul, sq), None
+
+    res, _ = jax.lax.scan(step, res0, eb_t)
+    return res
 
 
 def _ge(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -210,7 +346,12 @@ def mont_mul(a: jax.Array, b: jax.Array, ctx: MontCtx, lazy: bool = True,
     per-iteration-normalization measurement baseline (bench_gmp).  The
     pallas kernel is lazy by construction; reference is exact host math.
     """
-    backend = _resolve_backend(backend)
+    backend = _resolve_backend(backend, ctx)
+    if backend == "barrett":
+        raise ValueError(
+            "mont_mul computes a*b*R^{-1} (Montgomery form); the Barrett "
+            "backend has no R -- use mod_mul / mod_exp, which dispatch "
+            "to barrett_mod_mul on plain residues")
     if backend == "jnp":
         return _mont_mul_jnp(a, b, ctx, lazy)
     if backend == "pallas":
@@ -237,9 +378,31 @@ def from_mont(x: jax.Array, ctx: MontCtx,
     return mont_mul(x, one, ctx, backend=backend)
 
 
-def mod_mul(a: jax.Array, b: jax.Array, ctx: MontCtx,
+def _mod_mul_reference(a, b, ctx) -> jax.Array:
+    """Host-side Python-int (a*b) mod n oracle (any modulus parity)."""
+    a = np.asarray(a, np.uint32)
+    b = np.asarray(b, np.uint32)
+    shape = np.broadcast_shapes(a.shape[:-1], b.shape[:-1]) + (ctx.m,)
+    a2, batch_shape = _flatten_batch(np.broadcast_to(a, shape), ctx.m)
+    b2, _ = _flatten_batch(np.broadcast_to(b, shape), ctx.m)
+    out = np.stack([
+        L.int_to_limbs((L.limbs_to_int(a2[i], DIGIT_BITS)
+                        * L.limbs_to_int(b2[i], DIGIT_BITS)) % ctx.n,
+                       ctx.m, DIGIT_BITS)
+        for i in range(a2.shape[0])])
+    return jnp.asarray(out.reshape(batch_shape + (ctx.m,)))
+
+
+def mod_mul(a: jax.Array, b: jax.Array, ctx,
             backend: str | None = None) -> jax.Array:
-    """Plain modular product (enters/leaves Montgomery form)."""
+    """Plain modular product.  Montgomery backends enter/leave Montgomery
+    form; the Barrett backend (or any BarrettCtx, e.g. an even modulus
+    from mod_setup) multiplies and reduces directly."""
+    backend = _resolve_backend(backend, ctx)
+    if backend == "barrett":
+        return barrett_mod_mul(a, b, ctx)
+    if backend == "reference" and isinstance(ctx, BarrettCtx):
+        return _mod_mul_reference(a, b, ctx)    # no Montgomery form exists
     return from_mont(
         mont_mul(to_mont(a, ctx, backend), to_mont(b, ctx, backend), ctx,
                  backend=backend), ctx, backend)
@@ -286,7 +449,7 @@ def _mod_exp_reference(base, exp_bits, ctx: MontCtx) -> jax.Array:
     return jnp.asarray(out.reshape(batch_shape + (ctx.m,)))
 
 
-def mod_exp(base: jax.Array, exp_bits: jax.Array, ctx: MontCtx,
+def mod_exp(base: jax.Array, exp_bits: jax.Array, ctx,
             lazy: bool = True, backend: str | None = None) -> jax.Array:
     """base ** e mod n.
 
@@ -294,9 +457,12 @@ def mod_exp(base: jax.Array, exp_bits: jax.Array, ctx: MontCtx,
     bits MSB-first.  Constant-time ladder: square always, multiply always,
     select by the exponent bit.  Dispatched to the selected backend; on
     "pallas" every ladder step is two fused VMEM-resident kernel launches.
-    ``lazy`` applies to the jnp backend only (see mont_mul).
+    ``lazy`` applies to the jnp backend only (see mont_mul).  A
+    BarrettCtx (even modulus) auto-routes to the Barrett ladder.
     """
-    backend = _resolve_backend(backend)
+    backend = _resolve_backend(backend, ctx)
+    if backend == "barrett":
+        return _barrett_mod_exp(base, exp_bits, ctx)
     if backend == "jnp":
         return _mod_exp_jnp(base, exp_bits, ctx, lazy)
     if backend == "pallas":

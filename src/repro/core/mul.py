@@ -371,6 +371,14 @@ def select_method(nbits: int, batch: int = 1,
     allows (worth it when the MXU would otherwise sit idle).  The
     environment override REPRO_MUL_BACKEND wins over everything (ops
     knob for A/B experiments without code changes).
+
+    Batch awareness: the kernels tile the BATCH axis -- that is where
+    the carry machinery amortizes.  Below ``cfg.kernel_min_batch``
+    independent operations a launch cannot pay for itself (and on CPU
+    its interpret-mode compile dwarfs the work), so small batches take
+    the jnp compositions: VnC while the quadratic outer product stays
+    small, Karatsuba beyond.  The division subsystem's batch-1 paths
+    (base conversion, the pi workload) live in this regime.
     """
     import os
 
@@ -382,7 +390,9 @@ def select_method(nbits: int, batch: int = 1,
             raise ValueError(
                 f"REPRO_MUL_BACKEND={env!r}; choose from {MUL_METHODS}")
         return env
-    del batch  # reserved for launch-amortization heuristics
+    if batch < cfg.kernel_min_batch:
+        return "dot" if nbits <= cfg.small_batch_dot_max_bits \
+            else "karatsuba"
     if prefer_mxu and nbits <= cfg.mxu_max_bits:
         return "pallas_mxu"
     if nbits <= cfg.jnp_max_bits:

@@ -5,11 +5,16 @@ The GMPbench "pi" analogue (paper Fig. 4: +19.3% from faster add/sub/mul):
   arctan(1/x) = sum_k (-1)^k / ((2k+1) x^(2k+1))
 
 Fixed point: F = value * B**m for radix B = 2**16 and m digits.  Each term
-needs one division by a SMALL integer (x**2 <= 57121 and 2k+1), which is a
-digit-wise scan with a running remainder, plus one DoT add/sub per term --
-the workload is dominated by exactly the primitives the paper accelerates.
-All series state lives in JAX; only the final decimal rendering is host-
-side Python.
+needs one division by a SMALL integer (x**2 <= 57121 and 2k+1) -- the
+division subsystem's scalar fast path (core/div.div_small) -- plus one
+DoT add/sub per term (core/div's digit add/sub helpers; the carry logic
+lives THERE now, not here).
+
+Decimal rendering runs ON DEVICE too: the fractional part is scaled by
+10**n (one pipeline multiply) and converted with core/div.to_decimal's
+divide-and-conquer divmod -- only the final digit array crosses to the
+host.  The workload is therefore add/sub + div_small for the series and
+mul + divmod for the output: every primitive the repo accelerates.
 """
 from __future__ import annotations
 
@@ -18,40 +23,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import limbs as L
-from repro.core.mul import normalize_digits
+from repro.core.div import (add_digits, div_small, mul_digits_via_pipeline,
+                            sub_digits, to_decimal_digits)
 
 U32 = jnp.uint32
 DIGIT_BITS = 16
-MASK = jnp.uint32(0xFFFF)
-
-
-def div_small(x: jax.Array, s) -> jax.Array:
-    """Exact floor-division of an m-digit fixed-point number by a small
-    positive int s < 2**16: scan from the most significant digit with a
-    running remainder (r*B + d < 2**32 stays exact in uint32)."""
-    s = jnp.uint32(s)
-
-    def step(r, d):
-        cur = (r << jnp.uint32(DIGIT_BITS)) | d
-        q = cur // s
-        return cur - q * s, q
-
-    x_t = jnp.moveaxis(x, -1, 0)[::-1]            # MSB first
-    _, q_t = jax.lax.scan(step, jnp.zeros(x.shape[:-1], U32), x_t)
-    return jnp.moveaxis(q_t[::-1], 0, -1)
-
-
-def _widen_add(a, b):
-    """Digit-domain (radix 2**16) add: lazy sum + deferred-carry resolve."""
-    return normalize_digits(a + b, DIGIT_BITS)
-
-
-def _widen_sub(a, b):
-    """Digit-domain subtract, a >= b: radix complement + carry resolve
-    (the mod-B**m carry drops off the top)."""
-    comp = (MASK - b) & MASK
-    t = (a + comp).at[..., 0].add(1)
-    return normalize_digits(t, DIGIT_BITS)
 
 
 def arctan_inv(x: int, m_digits: int) -> jax.Array:
@@ -72,8 +48,8 @@ def arctan_inv(x: int, m_digits: int) -> jax.Array:
         t, total, k, sign = state
         term = div_small(t, 2 * k + 1)
         total = jnp.where(sign == 1,
-                          _widen_sub(total, term),
-                          _widen_add(total, term))
+                          sub_digits(total, term)[0],
+                          add_digits(total, term))
         t = div_small(t, x2)
         return t, total, k + 1, 1 - sign
 
@@ -89,7 +65,7 @@ def _mul_small(x: jax.Array, s: int) -> jax.Array:
     """x * s for small s, WIDENED by one digit (holds the integer part)."""
     from repro.core.mul import normalize_digits
     prod = x * jnp.uint32(s)
-    lo = prod & MASK
+    lo = prod & jnp.uint32(0xFFFF)
     hi = prod >> jnp.uint32(DIGIT_BITS)
     zeros1 = jnp.zeros(x.shape[:-1] + (1,), U32)
     out = jnp.concatenate([lo, zeros1], axis=-1)
@@ -97,24 +73,42 @@ def _mul_small(x: jax.Array, s: int) -> jax.Array:
     return normalize_digits(out, DIGIT_BITS)
 
 
-def pi_digits(n_decimal: int, guard_digits: int = 4) -> str:
-    """Compute pi to n_decimal digits; returns "3.1415..." string."""
+def pi_fixed_point(n_decimal: int, guard_digits: int = 4):
+    """Machin's series on device: (pi * B**m as (m+1,) digits, m)."""
     bits_needed = int(n_decimal * np.log2(10)) + 16 * guard_digits
     m = -(-bits_needed // DIGIT_BITS)
     a5 = arctan_inv(5, m)
     a239 = arctan_inv(239, m)
-    pi_fx = _widen_sub(_mul_small(a5, 16), _mul_small(a239, 4))
-    # host-side decimal rendering
-    val = L.limbs_to_int(np.asarray(pi_fx), DIGIT_BITS)
-    scale = 1 << (DIGIT_BITS * m)
-    int_part = val // scale
-    frac = val - int_part * scale
-    digits = []
-    for _ in range(n_decimal):
-        frac *= 10
-        digits.append(str(frac // scale))
-        frac %= scale
-    return f"{int_part}." + "".join(digits)
+    return sub_digits(_mul_small(a5, 16), _mul_small(a239, 4))[0], m
+
+
+def pi_decimal_digits(n_decimal: int, guard_digits: int = 4):
+    """(integer part, (n_decimal,) decimal fraction digits) -- both on
+    device until the final host transfer.
+
+    The fraction digits are floor(frac * 10**n / B**m) rendered by the
+    divide-and-conquer base conversion; the scale-by-10**n is one
+    pipeline multiply.
+    """
+    pi_fx, m = pi_fixed_point(n_decimal, guard_digits)
+    int_part = pi_fx[..., m]                       # top digit: 3
+    frac = pi_fx[..., :m]
+    ten_n = 10 ** n_decimal
+    nt = max(1, -(-ten_n.bit_length() // DIGIT_BITS))
+    ten_arr = jnp.asarray(L.int_to_limbs(ten_n, nt, DIGIT_BITS))
+    w = max(m, nt)
+    scaled = mul_digits_via_pipeline(
+        jnp.pad(frac, (0, w - m)), jnp.pad(ten_arr, (0, w - nt)))
+    y = scaled[..., m: m + nt]                     # floor(frac*10**n / B**m)
+    return int_part, to_decimal_digits(y, n_decimal)
+
+
+def pi_digits(n_decimal: int, guard_digits: int = 4) -> str:
+    """Compute pi to n_decimal digits; returns "3.1415..." string."""
+    int_part, dec = jax.jit(
+        lambda nd=n_decimal, g=guard_digits: pi_decimal_digits(nd, g))()
+    return f"{int(int_part)}." + "".join(
+        str(d) for d in np.asarray(dec).tolist())
 
 
 def pi_reference(n_decimal: int) -> str:

@@ -70,6 +70,8 @@ class RSAKey:
     e: int
     d: int
     bits: int
+    p: int = 0                   # prime factors (0: unknown -- no CRT)
+    q: int = 0
 
     @property
     def ctx(self) -> M.MontCtx:
@@ -90,7 +92,7 @@ def generate_key(bits: int = 512, seed: int = 0, e: int = 65537) -> RSAKey:
                 d = pow(e, -1, phi)
             except ValueError:
                 continue
-            return RSAKey(n=n, e=e, d=d, bits=bits)
+            return RSAKey(n=n, e=e, d=d, bits=bits, p=p, q=q)
 
 
 # ---------------------------------------------------------------------------
@@ -117,6 +119,54 @@ def verify(sig_digits: jax.Array, key: RSAKey,
     bits = M.exp_bits_msb(key.e)
     return M.mod_exp(sig_digits, jnp.asarray(bits), key.ctx,
                      backend=backend)
+
+
+def decrypt_crt(c_digits: jax.Array, key: RSAKey,
+                backend: str | None = None) -> jax.Array:
+    """m = c^d mod n via the Chinese Remainder Theorem: two HALF-SIZE
+    modexps (c^{d mod p-1} mod p, c^{d mod q-1} mod q) recombined with
+    Garner's formula -- ~4x fewer digit-multiply work than the full
+    ladder, the standard RSA private-key optimization.
+
+    The recombination runs on device on the division subsystem: p and q
+    are HOST-known key constants, so every mod-p/mod-q reduction is a
+    core/div.divmod_const (exact host reciprocal: one pipeline multiply
+    + a branch-free fix -- no Newton chain in the hot path) and the
+    cross-products ride the multiply pipeline.  Host-side: only the
+    per-key constants (d mod p-1, d mod q-1, q^{-1} mod p).
+    """
+    from repro.core import div as DV
+
+    if not (key.p and key.q):
+        raise ValueError("decrypt_crt needs a key with known p, q factors")
+    p, q = key.p, key.q
+    ctx_p = M.mont_setup(p)
+    ctx_q = M.mont_setup(q)
+    mp, mq, mn = ctx_p.m, ctx_q.m, key.ctx.m
+    dp_bits = jnp.asarray(M.exp_bits_msb(key.d % (p - 1), p.bit_length()))
+    dq_bits = jnp.asarray(M.exp_bits_msb(key.d % (q - 1), q.bit_length()))
+    p_dig = jnp.asarray(L.int_to_limbs(p, mp, DIGIT_BITS))
+    q_dig = jnp.asarray(L.int_to_limbs(q, mq, DIGIT_BITS))
+    qinv_dig = jnp.asarray(
+        L.int_to_limbs(pow(q, -1, p), mp, DIGIT_BITS))
+
+    c = jnp.asarray(c_digits, U32)
+    c_p = DV.divmod_const(c, p)[1][..., :mp]                # c mod p
+    c_q = DV.divmod_const(c, q)[1][..., :mq]
+    m1 = M.mod_exp(c_p, dp_bits, ctx_p, backend=backend)    # (.., mp)
+    m2 = M.mod_exp(c_q, dq_bits, ctx_q, backend=backend)    # (.., mq)
+
+    # Garner: h = qinv * (m1 - m2) mod p;  m = m2 + h*q
+    m2_p = DV.divmod_const(m2, p)[1][..., :mp]              # m2 mod p
+    w = mp + 1
+    t = DV.add_digits(DV._pad_to(m1, w), DV._pad_to(p_dig, w))
+    t, _ = DV.sub_digits(t, DV._pad_to(m2_p, w))            # < 2p
+    over = DV.ge_digits(t, DV._pad_to(p_dig, w))
+    t = DV.sub_digits(t, DV._pad_to(p_dig, w) * over[..., None])[0]
+    prod = DV._mul_equalized(t[..., :mp], qinv_dig)         # (.., 2mp)
+    h = DV.divmod_const(prod, p)[1][..., :mp]               # (.., mp)
+    hq = DV._mul_equalized(h, q_dig)[..., :mn]              # h*q < n
+    return DV.add_digits(DV._pad_to(m2, mn), hq)
 
 
 def digest_int(data: bytes, bits: int) -> int:

@@ -1,0 +1,91 @@
+"""Jit'd wrappers for the fused Knuth-D long-division Pallas kernel.
+
+Mirrors dot_mul/ops: interpret mode auto-selected on CPU, batch padded
+to the tile size and trimmed after the call, tile chosen outside jit via
+kernels/common (heuristic by default, measured sweep under
+REPRO_AUTOTUNE=1).
+
+The Knuth normalization lives HERE, not in the kernel: the per-element
+shift s (pushing the divisor's top bit to the array top) is
+data-dependent, so it runs as plain jnp gather/shift ops around the
+launch while the kernel keeps fully static control flow.  The dividend
+is widened by the divisor width so the shift cannot overflow, the
+kernel divides the shifted pair, and the remainder is un-shifted on the
+way out (the quotient needs no fixup: scaling numerator and denominator
+by 2**s preserves it exactly).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import div as coredivi
+from repro.kernels.common import autotune, tiling
+from repro.kernels.common.runtime import auto_interpret as _auto_interpret
+from repro.kernels.dot_div import kernel as K
+
+U32 = jnp.uint32
+DIGIT_BITS = 16
+
+
+def _heuristic_tile(w: int, batch: int) -> int:
+    return tiling.batch_tile(
+        w, batch, budget=tiling.budget_words(K.LIVE_U32_ARRAYS),
+        max_tile=K.MAX_TILE)
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def _call(a_s, b_norm, tb: int, interpret: bool):
+    batch, wa = a_s.shape
+    nb = b_norm.shape[-1]
+    pad = (-batch) % tb
+    if pad:
+        a_s = jnp.pad(a_s, ((0, pad), (0, 0)))
+        b_norm = jnp.pad(b_norm, ((0, pad), (0, 0)))
+        # padded lanes divide by 0; the kernel masks b_top so they only
+        # produce (discarded) garbage, never a fault
+    grid = a_s.shape[0] // tb
+    q, r = K.make_call(tb, wa, nb, grid, interpret)(a_s, b_norm)
+    return q[:batch], r[:batch]
+
+
+def dot_divmod_digits(a_digits, b_digits, interpret=None):
+    """(batch, na) // (batch, nb) radix-2**16 digit arrays ->
+    ((batch, na) quotient, (batch, nb) remainder), exact.
+
+    b == 0 lanes are undefined.  na*nb digit steps run fused in VMEM;
+    use the reciprocal path (core/div) for operand sizes above the
+    DIV_DISPATCH threshold.
+    """
+    a = jnp.asarray(a_digits, U32)
+    b = jnp.asarray(b_digits, U32)
+    batch, na = a.shape
+    nb = b.shape[-1]
+    s = jnp.uint32(nb * DIGIT_BITS) - coredivi.bit_length_digits(b)
+    b_norm = coredivi.shift_left_bits(b, s)
+    a_s = coredivi.shift_left_bits(
+        jnp.pad(a, ((0, 0), (0, nb))), s)              # (batch, na+nb)
+    interpret = _auto_interpret(interpret)
+    tb = autotune.pick_tile(
+        "dot_div", (na + nb, nb, batch, 16, interpret),
+        _heuristic_tile(na + nb, batch), batch,
+        run=lambda t: _call(a_s, b_norm, t, interpret), max_tile=K.MAX_TILE)
+    q, r_norm = _call(a_s, b_norm, tb, interpret)
+    r = coredivi.shift_right_bits(r_norm, s)
+    return q[:, :na], r
+
+
+def dot_divmod_limbs32(a_limbs, b_limbs, interpret=None):
+    """(batch, ma) // (batch, mb) uint32 saturated limbs -> (q, r) limbs,
+    with radix conversion at entry/exit (same contract as
+    core/div.divmod_limbs32)."""
+    from repro.core.mul import join_digits, split_digits
+    ma = a_limbs.shape[-1]
+    mb = b_limbs.shape[-1]
+    a_d = split_digits(jnp.asarray(a_limbs, U32), DIGIT_BITS)
+    b_d = split_digits(jnp.asarray(b_limbs, U32), DIGIT_BITS)
+    q_d, r_d = dot_divmod_digits(a_d, b_d, interpret)
+    return (join_digits(q_d, DIGIT_BITS, ma),
+            join_digits(r_d, DIGIT_BITS, mb))

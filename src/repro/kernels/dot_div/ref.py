@@ -1,0 +1,31 @@
+"""Python-int oracle for the fused long-division kernel.
+
+Python ints ARE the reference bignum implementation (see core/limbs.py):
+the oracle computes divmod() exactly, host-side, digit-for-digit
+comparable with the kernel output.  Deliberately independent of ALL jnp
+code so a kernel bug and a core/div.py bug cannot cancel.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import limbs as L
+
+DIGIT_BITS = 16
+
+
+def divmod_ref(a_digits: np.ndarray, b_digits: np.ndarray):
+    """(batch, na), (batch, nb) digit arrays -> ((batch, na), (batch, nb))
+    exact quotient/remainder digits (b == 0 rows raise, as undefined)."""
+    a_digits = np.asarray(a_digits)
+    b_digits = np.asarray(b_digits)
+    na = a_digits.shape[-1]
+    nb = b_digits.shape[-1]
+    qs, rs = [], []
+    for i in range(a_digits.shape[0]):
+        x = L.limbs_to_int(a_digits[i], DIGIT_BITS)
+        y = L.limbs_to_int(b_digits[i], DIGIT_BITS)
+        q, r = divmod(x, y)
+        qs.append(L.int_to_limbs(q, na, DIGIT_BITS))
+        rs.append(L.int_to_limbs(r, nb, DIGIT_BITS))
+    return np.stack(qs), np.stack(rs)

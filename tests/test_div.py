@@ -1,0 +1,341 @@
+"""Division subsystem vs Python-int ground truth: Newton reciprocal,
+divmod (kernel + reciprocal paths), constant-divisor division, base
+conversion, dispatch coverage, and (with hypothesis) the exactness
+invariant q*b + r == a, 0 <= r < b.
+
+Kernel oracle tests run the Pallas kernel in interpret mode on CPU;
+widths at/above 256 bits are slow-marked (the unrolled Knuth-D step
+count makes interpret-mode tracing expensive), matching the CI
+fast-subset policy.  Hypothesis strategies use FIXED array widths and
+random values so each suite compiles a handful of traces, not one per
+example.
+"""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro.core.div as DV
+from repro.core import limbs as L
+from repro.kernels.dot_div import ops as div_ops
+from repro.kernels.dot_div import ref as div_ref
+
+RNG = np.random.default_rng(17)
+
+
+def _digits(ints, nd, bits=16):
+    return np.stack([L.int_to_limbs(v, nd, bits) for v in ints])
+
+
+def _check_divmod(q, r, xs, ys, bits):
+    q, r = np.asarray(q), np.asarray(r)
+    for i, (x, y) in enumerate(zip(xs, ys)):
+        qi = L.limbs_to_int(q[i], bits)
+        ri = L.limbs_to_int(r[i], bits)
+        assert qi == x // y and ri == x % y, (i, x, y, qi, ri)
+
+
+# ---------------------------------------------------------------------------
+# Newton reciprocal: never overestimates, undershoots by at most a few.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nbits", [64, 256, 512])
+def test_recip_digits_bounds(nbits):
+    nd = nbits // 16
+    bs = [x | (1 << (nbits - 1)) for x in L.random_bigints(RNG, 8, nbits)]
+    v = np.asarray(DV.recip_digits(jnp.asarray(_digits(bs, nd))))
+    for i, b in enumerate(bs):
+        err = (1 << (32 * nd)) // b - L.limbs_to_int(v[i], 16)
+        assert 0 <= err <= 4, (nbits, i, err)
+
+
+def test_recip_limbs32_bounds():
+    nbits, m = 256, 8
+    bs = [max(1, b) for b in L.random_bigints(RNG, 8, nbits)]
+    v, s = DV.recip_limbs32(jnp.asarray(L.ints_to_batch(bs, m)))
+    v, s = np.asarray(v), np.asarray(s)
+    for i, b in enumerate(bs):
+        b_norm = b << int(s[i])
+        assert 1 << (32 * m - 1) <= b_norm < 1 << (32 * m)
+        err = (1 << (64 * m)) // b_norm - L.limbs_to_int(v[i], 32)
+        assert 0 <= err <= 4, (i, err)
+
+
+# ---------------------------------------------------------------------------
+# Pallas Knuth-D kernel vs the independent Python-int oracle.
+# ---------------------------------------------------------------------------
+
+KERNEL_WIDTHS = [64, 128,
+                 pytest.param(256, marks=pytest.mark.slow),
+                 pytest.param(512, marks=pytest.mark.slow)]
+
+
+@pytest.mark.parametrize("nbits", KERNEL_WIDTHS)
+def test_div_kernel_vs_python_int(nbits):
+    nd = nbits // 16
+    xs = L.random_bigints(RNG, 7, nbits)
+    ys = [max(1, y) for y in L.random_bigints(RNG, 7, nbits - 9)]
+    a, b = _digits(xs, nd), _digits(ys, nd)
+    q, r = div_ops.dot_divmod_digits(a, b)
+    qr, rr = div_ref.divmod_ref(a, b)
+    np.testing.assert_array_equal(np.asarray(q), qr)
+    np.testing.assert_array_equal(np.asarray(r), rr)
+
+
+def test_div_kernel_pathological_and_padding():
+    """Odd batch exercises tile padding; pathological pairs exercise the
+    trial-quotient add-back corrections."""
+    nbits, nd = 128, 8
+    pairs = [(x, max(1, y)) for x, y in L.pathological_pairs(nbits, bits=16)]
+    pairs += [(12345, 1), (1 << 127, 1 << 90), (5, 7), (0, 3),
+              ((1 << 128) - 1, (1 << 64) + 1)]
+    q, r = div_ops.dot_divmod_digits(
+        _digits([p[0] for p in pairs], nd), _digits([p[1] for p in pairs], nd))
+    _check_divmod(q, r, [p[0] for p in pairs], [p[1] for p in pairs], 16)
+
+
+# ---------------------------------------------------------------------------
+# divmod_limbs32 vs Python ints across the acceptance grid.
+# ---------------------------------------------------------------------------
+
+# (nbits, divmod method, batch, forced mul backend, marks).  The forced
+# "dot" rows keep the 2048/4096-bit oracle runs tractable on CPU: the
+# interpret-mode kernels and the unrolled jnp Karatsuba both take
+# minutes of XLA compile at those multiply widths, while the VnC
+# composition compiles in seconds and its quadratic runtime is
+# irrelevant at batch 64 (the mul backends are oracle-tested
+# independently in test_mul_pipeline).
+DIVMOD_GRID = [
+    (512, "recip", 64, None, None),
+    (128, "auto", 8, None, None),            # auto -> schoolbook kernel
+    (512, "auto", 8, None, pytest.mark.slow),   # kernel at the boundary
+    (1024, "recip", 64, None, pytest.mark.slow),
+    (2048, "recip", 64, "dot", pytest.mark.slow),
+    (4096, "recip", 64, "dot", pytest.mark.slow),
+]
+
+
+@pytest.mark.parametrize(
+    "nbits,method,batch,mul_backend",
+    [pytest.param(n, me, ba, mb, marks=mk) if mk else (n, me, ba, mb)
+     for n, me, ba, mb, mk in DIVMOD_GRID])
+def test_divmod_limbs32_vs_python_int(nbits, method, batch, mul_backend,
+                                      monkeypatch):
+    if mul_backend:
+        monkeypatch.setenv("REPRO_MUL_BACKEND", mul_backend)
+    m = nbits // 32
+    xs = L.random_bigints(RNG, batch, nbits)
+    ys = [max(1, y) for y in L.random_bigints(RNG, batch, nbits - 11)]
+    q, r = DV.divmod_jit(jnp.asarray(L.ints_to_batch(xs, m)),
+                         jnp.asarray(L.ints_to_batch(ys, m)), method)
+    _check_divmod(q, r, xs, ys, 32)
+
+
+def test_divmod_wide_dividend_narrow_divisor():
+    """The reciprocal must carry QUOTIENT-width precision: a divisor-
+    width reciprocal leaves a ~D**(na-nb) quotient error for shapes like
+    512-bit / 64-bit, which the +1-per-trip correction loop can never
+    close (regression test for exactly that hang)."""
+    ma, mb = 16, 2                           # 512-bit a, 64-bit b
+    xs = L.random_bigints(RNG, 8, 32 * ma)
+    ys = [max(1, y) for y in L.random_bigints(RNG, 8, 29)]
+    q, r = DV.divmod_limbs32(jnp.asarray(L.ints_to_batch(xs, ma)),
+                             jnp.asarray(L.ints_to_batch(ys, mb)),
+                             method="recip")
+    q, r = np.asarray(q), np.asarray(r)
+    for i, (x, y) in enumerate(zip(xs, ys)):
+        assert L.limbs_to_int(q[i], 32) == x // y, i
+        assert L.limbs_to_int(r[i], 32) == x % y, i
+
+
+def test_divmod_leading_batch_dims():
+    nbits, m = 512, 16
+    xs = L.random_bigints(RNG, 6, nbits)
+    ys = [max(1, y) for y in L.random_bigints(RNG, 6, 200)]
+    a = L.ints_to_batch(xs, m).reshape(2, 3, m)
+    b = L.ints_to_batch(ys, m).reshape(2, 3, m)
+    q, r = DV.divmod_limbs32(a, b, method="recip")
+    assert q.shape == (2, 3, m) and r.shape == (2, 3, m)
+    _check_divmod(np.asarray(q).reshape(6, m), np.asarray(r).reshape(6, m),
+                  xs, ys, 32)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch: select_div_method branches + env override.
+# ---------------------------------------------------------------------------
+
+def test_select_div_method_branches():
+    from repro.configs.dot_bignum import DIV_DISPATCH as cfg
+    from repro.configs.dot_bignum import MUL_DISPATCH
+    B = 64                        # batch large enough to amortize a launch
+    assert DV.select_div_method(256, 256, batch=B) == "schoolbook"
+    assert DV.select_div_method(cfg.schoolbook_max_bits, 64,
+                                batch=B) == "schoolbook"
+    assert DV.select_div_method(cfg.schoolbook_max_bits + 32, 64,
+                                batch=B) == "recip"
+    assert DV.select_div_method(8192, 4096, batch=B) == "recip"
+    # tiny batches cannot amortize the kernel launch: reciprocal path
+    small = MUL_DISPATCH.kernel_min_batch - 1
+    assert DV.select_div_method(256, 256, batch=small) == "recip"
+
+
+def test_select_div_method_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_DIV_BACKEND", "recip")
+    assert DV.select_div_method(256, 256) == "recip"
+    monkeypatch.setenv("REPRO_DIV_BACKEND", "bogus")
+    with pytest.raises(ValueError):
+        DV.select_div_method(256, 256)
+
+
+# ---------------------------------------------------------------------------
+# Constant-divisor division + on-device base conversion.
+# ---------------------------------------------------------------------------
+
+def test_divmod_const_exact():
+    nd = 16                                    # 256-bit values
+    xs = L.random_bigints(RNG, 6, 16 * nd)
+    x = jnp.asarray(_digits(xs, nd))
+    for c in (1, 7, 10 ** 9, 10 ** 40, 2 ** 100, (1 << 255) - 1):
+        q, r = DV.divmod_const(x, c)
+        for i, v in enumerate(xs):
+            assert L.limbs_to_int(np.asarray(q)[i], 16) == v // c, (c, i)
+            assert L.limbs_to_int(np.asarray(r)[i], 16) == v % c, (c, i)
+
+
+def test_to_decimal_digits():
+    n_dec = 73
+    nd = DV._dec_width(n_dec, 16)
+    xs = [v % 10 ** n_dec for v in L.random_bigints(RNG, 5, 16 * nd)]
+    xs += [0, 10 ** n_dec - 1, 1]
+    dec = np.asarray(DV.to_decimal_digits(jnp.asarray(_digits(xs, nd)), n_dec))
+    assert dec.shape == (len(xs), n_dec)
+    for i, v in enumerate(xs):
+        assert "".join(map(str, dec[i])) == str(v).zfill(n_dec), (i, v)
+
+
+def test_to_decimal_limbs32():
+    n_dec = 30
+    m = 4
+    xs = [v % 10 ** n_dec for v in L.random_bigints(RNG, 4, 32 * m)]
+    dec = np.asarray(DV.to_decimal_limbs32(
+        jnp.asarray(L.ints_to_batch(xs, m)), n_dec))
+    for i, v in enumerate(xs):
+        assert "".join(map(str, dec[i])) == str(v).zfill(n_dec), (i, v)
+
+
+def test_div_small_matches_python():
+    nd = 20
+    xs = L.random_bigints(RNG, 6, 16 * nd)
+    x = jnp.asarray(_digits(xs, nd))
+    for s in (1, 3, 239 * 239, 65535):
+        q = np.asarray(DV.div_small(x, s))
+        for i, v in enumerate(xs):
+            assert L.limbs_to_int(q[i], 16) == v // s, (s, i)
+
+
+# ---------------------------------------------------------------------------
+# Shift/compare helpers (the normalization machinery).
+# ---------------------------------------------------------------------------
+
+def test_bit_length_and_shifts_roundtrip():
+    nd = 8
+    xs = [0, 1, 5, 1 << 64, (1 << 128) - 1] + L.random_bigints(RNG, 3, 100)
+    x = jnp.asarray(_digits(xs, nd))
+    bl = np.asarray(DV.bit_length_digits(x))
+    assert [int(v) for v in bl] == [v.bit_length() for v in xs]
+    s = jnp.asarray(np.asarray(
+        [nd * 16 - v.bit_length() if v else 0 for v in xs], np.uint32))
+    up = DV.shift_left_bits(x, s)
+    down = np.asarray(DV.shift_right_bits(up, s))
+    for i, v in enumerate(xs):
+        assert L.limbs_to_int(np.asarray(up)[i], 16) == v << int(s[i]), i
+        assert L.limbs_to_int(down[i], 16) == v, i
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis: the divmod invariant across digit_bits in {8, 12, 16}.
+# Fixed widths per digit_bits (one trace each), random values.
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYP = True
+except ImportError:          # pragma: no cover - dev extra missing
+    HAVE_HYP = False
+
+if HAVE_HYP:
+    import functools
+
+    import jax
+
+    SET = settings(max_examples=25, deadline=None)
+    NA, NB = 12, 12                      # fixed digit widths per trace
+
+    @functools.lru_cache(maxsize=8)
+    def _divmod_compiled(digit_bits):
+        return jax.jit(functools.partial(
+            DV.divmod_digits, digit_bits=digit_bits, method="recip"))
+
+    def _invariant(x, y, digit_bits):
+        a = jnp.asarray(L.int_to_limbs(x, NA, digit_bits))[None]
+        b = jnp.asarray(L.int_to_limbs(y, NB, digit_bits))[None]
+        q, r = _divmod_compiled(digit_bits)(a, b)
+        qi = L.limbs_to_int(np.asarray(q)[0], digit_bits)
+        ri = L.limbs_to_int(np.asarray(r)[0], digit_bits)
+        assert qi * y + ri == x, (x, y, qi, ri)
+        assert 0 <= ri < y, (x, y, ri)
+        assert qi == x // y and ri == x % y
+
+    @given(st.data())
+    @SET
+    def test_divmod_invariant_16(data):
+        x = data.draw(st.integers(0, (1 << (16 * NA)) - 1))
+        y = data.draw(st.integers(1, (1 << (16 * NB)) - 1))
+        _invariant(x, y, 16)
+
+    @given(st.data())
+    @SET
+    def test_divmod_invariant_12(data):
+        x = data.draw(st.integers(0, (1 << (12 * NA)) - 1))
+        y = data.draw(st.integers(1, (1 << (12 * NB)) - 1))
+        _invariant(x, y, 12)
+
+    @given(st.data())
+    @SET
+    def test_divmod_invariant_8(data):
+        x = data.draw(st.integers(0, (1 << (8 * NA)) - 1))
+        y = data.draw(st.integers(1, (1 << (8 * NB)) - 1))
+        _invariant(x, y, 8)
+
+    @given(st.data())
+    @SET
+    def test_divmod_invariant_asymmetric_widths(data):
+        """Wide dividend over narrow divisor (the regime that needs
+        quotient-width reciprocal precision) and the reverse."""
+        a = jnp.asarray(L.int_to_limbs(
+            data.draw(st.integers(0, (1 << (16 * 20)) - 1)), 20, 16))[None]
+        b = jnp.asarray(L.int_to_limbs(
+            data.draw(st.integers(1, (1 << (16 * 3)) - 1)), 3, 16))[None]
+        q, r = _divmod_compiled(16)(a, b)
+        x = L.limbs_to_int(np.asarray(a)[0], 16)
+        y = L.limbs_to_int(np.asarray(b)[0], 16)
+        assert L.limbs_to_int(np.asarray(q)[0], 16) == x // y
+        assert L.limbs_to_int(np.asarray(r)[0], 16) == x % y
+
+    @given(st.data())
+    @SET
+    def test_divmod_special_divisors(data):
+        """b == 1, a < b, and power-of-two divisors."""
+        digit_bits = data.draw(st.sampled_from([8, 12, 16]))
+        x = data.draw(st.integers(0, (1 << (digit_bits * NA)) - 1))
+        kind = data.draw(st.sampled_from(["one", "a_lt_b", "pow2"]))
+        if kind == "one":
+            y = 1
+        elif kind == "a_lt_b":
+            y = data.draw(st.integers(1, (1 << (digit_bits * NB)) - 1))
+            x = data.draw(st.integers(0, y - 1))
+        else:
+            y = 1 << data.draw(st.integers(0, digit_bits * NB - 1))
+        _invariant(x, y, digit_bits)
+else:                        # keep collection green without the dev extra
+    def test_divmod_invariant_16():
+        pytest.skip("hypothesis not installed")

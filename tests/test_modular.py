@@ -38,6 +38,92 @@ def test_mod_exp_random(nbits, ebits):
         assert L.limbs_to_int(out[i], 16) == pow(x, e, n)
 
 
+BARRETT_WIDTHS = [256, 512,
+                  pytest.param(1024, marks=pytest.mark.slow),
+                  pytest.param(2048, marks=pytest.mark.slow)]
+
+
+@pytest.mark.parametrize("nbits", BARRETT_WIDTHS)
+@pytest.mark.parametrize("parity", ["odd", "even"])
+def test_barrett_mod_mul_vs_python_int(nbits, parity):
+    n = L.random_bigints(RNG, 1, nbits)[0] | (1 << (nbits - 1))
+    n = (n | 1) if parity == "odd" else (n & ~1)
+    ctx = M.barrett_setup(n, nbits)
+    xs = [v % n for v in L.random_bigints(RNG, 6, nbits)]
+    ys = [v % n for v in L.random_bigints(RNG, 6, nbits)]
+    a = jnp.asarray(np.stack([L.int_to_limbs(x, ctx.m, 16) for x in xs]))
+    b = jnp.asarray(np.stack([L.int_to_limbs(y, ctx.m, 16) for y in ys]))
+    out = np.asarray(jax.jit(
+        lambda a, b: M.barrett_mod_mul(a, b, ctx))(a, b))
+    for i, (x, y) in enumerate(zip(xs, ys)):
+        assert L.limbs_to_int(out[i], 16) == (x * y) % n, i
+
+
+def test_barrett_modexp_matches_montgomery():
+    """Same odd modulus, same exponent: the Barrett ladder must agree
+    with both Montgomery formulations and the Python oracle."""
+    nbits, ebits = 256, 24
+    n = L.random_bigints(RNG, 1, nbits)[0] | (1 << (nbits - 1)) | 1
+    ctx = M.mont_setup(n, nbits)
+    e = L.random_bigints(RNG, 1, ebits)[0] | 1
+    xs = [v % n for v in L.random_bigints(RNG, 4, nbits)]
+    a = jnp.asarray(np.stack([L.int_to_limbs(x, ctx.m, 16) for x in xs]))
+    eb = jnp.asarray(M.exp_bits_msb(e))
+    got_b = np.asarray(M.mod_exp(a, eb, ctx, backend="barrett"))
+    got_m = np.asarray(M.mod_exp(a, eb, ctx, backend="jnp"))
+    np.testing.assert_array_equal(got_b, got_m)
+    for i, x in enumerate(xs):
+        assert L.limbs_to_int(got_b[i], 16) == pow(x, e, n), i
+
+
+def test_even_modulus_auto_routes_to_barrett():
+    """mod_setup gives a BarrettCtx for even n; Montgomery-backend
+    requests on it silently (and correctly) take the Barrett path."""
+    nbits, ebits = 128, 16
+    n = (L.random_bigints(RNG, 1, nbits)[0] | (1 << (nbits - 1))) & ~1
+    ctx = M.mod_setup(n)
+    assert isinstance(ctx, M.BarrettCtx)
+    e = L.random_bigints(RNG, 1, ebits)[0] | 1
+    xs = [v % n for v in L.random_bigints(RNG, 4, nbits)]
+    a = jnp.asarray(np.stack([L.int_to_limbs(x, ctx.m, 16) for x in xs]))
+    eb = jnp.asarray(M.exp_bits_msb(e))
+    for be in ("jnp", "pallas", "barrett"):
+        got = np.asarray(M.mod_exp(a, eb, ctx, backend=be))
+        for i, x in enumerate(xs):
+            assert L.limbs_to_int(got[i], 16) == pow(x, e, n), (be, i)
+
+
+def test_barrett_setup_rejects_overdeclared_width():
+    """Padding nbits past the modulus breaks the trial-quotient bound;
+    the error must name the fix, not crash deep in limb packing."""
+    with pytest.raises(ValueError, match="nbits"):
+        M.barrett_setup(1000003, nbits=64)
+    assert M.barrett_setup(1000003, nbits=32).m == 2   # exact width: fine
+
+
+def test_mont_setup_rejects_even_modulus():
+    with pytest.raises(ValueError, match="Barrett"):
+        M.mont_setup(1 << 64)
+    with pytest.raises(ValueError, match="mod_mul"):
+        key_n = L.random_bigints(RNG, 1, 64)[0] | (1 << 63) | 1
+        ctx = M.mont_setup(key_n)
+        a = jnp.zeros((1, ctx.m), jnp.uint32)
+        M.mont_mul(a, a, ctx, backend="barrett")
+
+
+def test_rsa_crt_decrypt_matches_full():
+    from repro.core import rsa as R2
+    key = R2.generate_key(bits=192, seed=9)
+    assert key.p * key.q == key.n
+    msgs = [R2.digest_int(f"c{i}".encode(), key.bits) for i in range(3)]
+    md = R2.messages_to_digits(msgs, key)
+    full = np.asarray(R2.sign(md, key))            # m^d mod n
+    crt = np.asarray(jax.jit(lambda x: R2.decrypt_crt(x, key))(md))
+    np.testing.assert_array_equal(crt, full)
+    for i, m in enumerate(msgs):
+        assert L.limbs_to_int(crt[i], 16) == pow(m % key.n, key.d, key.n), i
+
+
 def test_rsa_sign_verify_roundtrip():
     key = R.generate_key(bits=256, seed=5)
     msgs = [R.digest_int(f"msg{i}".encode(), key.bits) for i in range(4)]

@@ -112,14 +112,28 @@ def test_mxu_kernel_limbs32_roundtrip():
 # ---------------------------------------------------------------------------
 
 def test_select_method_branches():
-    assert M.select_method(128) == "dot"
-    assert M.select_method(256) == "dot"
-    assert M.select_method(512) == "pallas"
-    assert M.select_method(1024) == "pallas_kara"
-    assert M.select_method(4096) == "pallas_kara"
-    assert M.select_method(8192) == "karatsuba"
-    assert M.select_method(1024, prefer_mxu=True) == "pallas_mxu"
-    assert M.select_method(8192, prefer_mxu=True) == "karatsuba"
+    B = 512                       # batch large enough to amortize a launch
+    assert M.select_method(128, batch=B) == "dot"
+    assert M.select_method(256, batch=B) == "dot"
+    assert M.select_method(512, batch=B) == "pallas"
+    assert M.select_method(1024, batch=B) == "pallas_kara"
+    assert M.select_method(4096, batch=B) == "pallas_kara"
+    assert M.select_method(8192, batch=B) == "karatsuba"
+    assert M.select_method(1024, batch=B, prefer_mxu=True) == "pallas_mxu"
+    assert M.select_method(8192, batch=B, prefer_mxu=True) == "karatsuba"
+
+
+def test_select_method_small_batch_avoids_kernels():
+    """Launches only amortize over the batch axis: tiny batches take the
+    jnp compositions (and dodge interpret-mode compile cost on CPU)."""
+    from repro.configs.dot_bignum import MUL_DISPATCH as cfg
+    small = cfg.kernel_min_batch - 1
+    assert M.select_method(1024, batch=small) == "dot"
+    assert M.select_method(cfg.small_batch_dot_max_bits,
+                           batch=small) == "dot"
+    assert M.select_method(cfg.small_batch_dot_max_bits + 32,
+                           batch=small) == "karatsuba"
+    assert M.select_method(1024, batch=cfg.kernel_min_batch) == "pallas_kara"
 
 
 def test_select_method_env_override(monkeypatch):
