@@ -3,8 +3,27 @@ sign/verify and DH-style fixed-base modexp throughput + latency
 percentiles across key sizes, reported head-to-head for the jnp and
 pallas (fused VMEM-resident Montgomery kernel) backends.
 
+The modexp section emits machine-readable records (op=modexp; see
+run.py --json-out / --check-baseline) comparing three ladder
+structures over per-lane full-width exponents:
+
+  * ``jnp``              windowed k-ary ladder, jnp Montgomery multiply
+                         (the speedup denominator),
+  * ``pallas_bitserial`` the PR-3 structure: two fused mont-mul kernel
+                         launches per exponent bit (rebuilt here from
+                         dot_mont_mul as a measurement baseline -- the
+                         bit-serial driver itself is gone from src),
+  * ``pallas_fused``     the fused full-ladder windowed kernel: ONE
+                         launch per modexp, table VMEM-resident.
+
+The committed benchmarks/BENCH_modexp.json floors gate pallas_fused in
+CI (conservative floors, not point estimates: interpret-mode ratios
+swing 1.5-3x on loaded CPU runners).
+
 ``--smoke`` (or run(smoke=True)) shrinks to one tiny key and 2 reps so
-CI can exercise the full code path in seconds.
+CI can exercise the full code path in seconds (the bit-serial baseline
+is skipped there: 2 launches x nbits is exactly the cost the fused
+ladder deletes, and smoke wall-clock matters).
 """
 from __future__ import annotations
 
@@ -18,9 +37,66 @@ import numpy as np
 from repro.core import limbs as L
 from repro.core import modular as MOD
 from repro.core import rsa as RSA
-from benchmarks.util import row
+from benchmarks.util import row, time_fn, record
 
 BACKENDS = ("jnp", "pallas")
+
+
+def _bitserial_pallas_mod_exp(base, eb, ctx):
+    """The PR-3 bit-serial ladder structure, composed from the fused
+    mont-mul kernel: square + multiply = two kernel launches per
+    exponent bit, result selected by the bit.  Kept ONLY as the
+    benchmark baseline the fused windowed ladder is gated against."""
+    x = MOD.to_mont(jnp.asarray(base, jnp.uint32), ctx, backend="pallas")
+    res0 = jnp.broadcast_to(
+        jnp.asarray(ctx.one_digits, jnp.uint32), x.shape)
+    eb = jnp.asarray(eb, jnp.uint32)
+    eb_t = jnp.moveaxis(
+        jnp.broadcast_to(eb, x.shape[:-1] + (eb.shape[-1],)), -1, 0)
+
+    def step(res, bit):
+        sq = MOD.mont_mul(res, res, ctx, backend="pallas")
+        mul = MOD.mont_mul(sq, x, ctx, backend="pallas")
+        return jnp.where((bit == 1)[..., None], mul, sq), None
+
+    res, _ = jax.lax.scan(step, res0, eb_t)
+    return MOD.from_mont(res, ctx, backend="pallas")
+
+
+def _modexp_records(out, records, sizes, batch, iters, with_bitserial):
+    """Per-lane full-width-exponent modexp: the throughput workload the
+    batched-exponent fused ladder exists for."""
+    rng = np.random.default_rng(23)
+    for nbits in sizes:
+        n = L.random_bigints(rng, 1, nbits)[0] | (1 << (nbits - 1)) | 1
+        ctx = MOD.mont_setup(n, nbits)
+        xs = [v % n for v in L.random_bigints(rng, batch, nbits)]
+        md = jnp.asarray(np.stack(
+            [L.int_to_limbs(x, ctx.m, 16) for x in xs]))
+        eb = jnp.asarray(np.stack(
+            [MOD.exp_bits_msb(int(e) | (1 << (nbits - 1)) | 1, nbits)
+             for e in L.random_bigints(rng, batch, nbits)]))
+        fns = {
+            "jnp": jax.jit(
+                lambda b, e, c=ctx: MOD.mod_exp(b, e, c, backend="jnp")),
+            "pallas_fused": jax.jit(
+                lambda b, e, c=ctx: MOD.mod_exp(b, e, c, backend="pallas")),
+        }
+        if with_bitserial and nbits <= 1024:
+            # 2 launches/bit: beyond 1024 bits the baseline alone would
+            # dominate the suite's wall-clock (which is the point)
+            fns["pallas_bitserial"] = jax.jit(
+                lambda b, e, c=ctx: _bitserial_pallas_mod_exp(b, e, c))
+        t_jnp = None
+        for be, fn in fns.items():
+            t = time_fn(fn, md, eb, iters=iters, warmup=1)
+            if be == "jnp":
+                t_jnp = t
+            record(records, op="modexp", bits=nbits, batch=batch,
+                   backend=be, seconds_per_call=t, baseline_seconds=t_jnp)
+            out.append(row(f"crypto/modexp{nbits}/{be}", t / batch,
+                           f"ops_s={batch / t:.1f} "
+                           f"speedup_vs_jnp={t_jnp / t:.2f}x"))
 
 
 def _latency_percentiles(fn, arg, iters=12):
@@ -34,14 +110,23 @@ def _latency_percentiles(fn, arg, iters=12):
     return (np.percentile(ts, 50), np.percentile(ts, 95))
 
 
-def run(full: bool = False, smoke: bool = False):
+def run(full: bool = False, smoke: bool = False, records: list | None = None):
     out = []
     if smoke:
         sizes, batch, iters = (128,), 4, 2
+        mx_sizes, mx_batch, mx_iters, bitserial = (512,), 64, 3, False
     elif full:
         sizes, batch, iters = (256, 512, 1024), 32, 12
+        mx_sizes, mx_batch, mx_iters, bitserial = (512, 1024, 2048), 64, 3, True
     else:
         sizes, batch, iters = (256, 512), 32, 12
+        mx_sizes, mx_batch, mx_iters, bitserial = (512, 1024), 64, 3, True
+    if records is not None or not smoke:
+        # In smoke mode the modexp section only matters for the gated
+        # records; CI's standalone `bench_crypto --smoke` step (records
+        # is None) already ran it via benchmarks.run -- skip the
+        # duplicate timing, it is the slowest part of the smoke suite.
+        _modexp_records(out, records, mx_sizes, mx_batch, mx_iters, bitserial)
     for bits in sizes:
         key = RSA.generate_key(bits=bits, seed=bits)
         msgs = [RSA.digest_int(f"m{i}".encode(), bits) for i in range(batch)]

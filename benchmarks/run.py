@@ -14,12 +14,14 @@ grid (slower); ``--smoke`` shrinks suites that support it to tiny sizes
 and 1-2 reps (the CI bitrot guard).  Individual suites:
 ``python -m benchmarks.bench_add``.
 
-Perf trajectory across PRs: suites that support it (add, mul, div) also
-produce machine-readable records.  ``--json-out DIR`` writes/merges them
-into DIR/BENCH_<suite>.json (keyed by op/bits/batch/backend, so smoke
-and full runs coexist in one file); ``--check-baseline`` compares the
-fresh records against the committed benchmarks/BENCH_<suite>.json and
-fails if any Pallas backend's speedup-vs-jnp regressed by more than
+Perf trajectory across PRs: suites that support it (add, mul, div, and
+crypto's modexp section) also produce machine-readable records.
+``--json-out DIR`` writes/merges them into DIR/BENCH_<suite>.json
+(keyed by op/bits/batch/backend, so smoke and full runs coexist in one
+file; the crypto suite's records land in BENCH_modexp.json, see
+SUITE_BASELINE); ``--check-baseline`` compares the fresh records
+against the committed benchmarks/BENCH_<suite>.json and fails if any
+Pallas backend's speedup-vs-jnp regressed by more than
 REGRESS_TOLERANCE (the CI perf gate).
 
 The committed smoke-key baselines are conservative FLOORS, not point
@@ -40,13 +42,18 @@ import traceback
 REGRESS_TOLERANCE = 0.20          # fail if speedup drops > 20% vs baseline
 BASELINE_DIR = os.path.dirname(os.path.abspath(__file__))
 
+# The crypto suite's machine-readable records are all modexp rows; its
+# baseline lives under the op name so the file says what it gates.
+SUITE_BASELINE = {"crypto": "modexp"}
+
 
 def _key(rec):
     return (rec["op"], rec["bits"], rec["batch"], rec["backend"])
 
 
 def _baseline_path(suite: str, out_dir: str | None = None) -> str:
-    return os.path.join(out_dir or BASELINE_DIR, f"BENCH_{suite}.json")
+    name = SUITE_BASELINE.get(suite, suite)
+    return os.path.join(out_dir or BASELINE_DIR, f"BENCH_{name}.json")
 
 
 def write_json(suite: str, records: list, out_dir: str) -> str:
@@ -79,9 +86,12 @@ def check_baseline(suite: str, records: list,
     the ratio are measured in the same run, so a slow CI machine cancels
     out); only keys present in both sets are judged.  The gate covers
     the multiply pipeline at kernel-sized operands (op "mul", >= 512
-    bits) and the division kernel (op "div", >= 256 bits): smaller micro
-    rows and the add strategy sweep are recorded for the trajectory but
-    their per-call times are too small for run-to-run-stable ratios.
+    bits), the division kernel (op "div", >= 256 bits), and the fused
+    windowed modexp ladder (op "modexp", >= 512 bits -- both the fused
+    kernel and the bit-serial composition it must keep beating): smaller
+    micro rows and the add strategy sweep are recorded for the
+    trajectory but their per-call times are too small for
+    run-to-run-stable ratios.
     """
     path = _baseline_path(suite)
     if not os.path.exists(path):
@@ -89,7 +99,7 @@ def check_baseline(suite: str, records: list,
     with open(path) as f:
         baseline = {_key(r): r for r in json.load(f)["records"]}
     problems = []
-    min_bits = {"mul": 512, "div": 256}
+    min_bits = {"mul": 512, "div": 256, "modexp": 512}
     for rec in records:
         if rec["op"] not in min_bits or rec["bits"] < min_bits[rec["op"]]:
             continue

@@ -19,17 +19,21 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--bits", type=int, default=512)
     ap.add_argument("--batch", type=int, default=32)
-    ap.add_argument("--backend", default="jnp", choices=("jnp", "pallas"),
-                    help="modular-arithmetic backend (core.modular)")
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "jnp", "pallas", "barrett"),
+                    help="modexp backend (core.modular); 'auto' routes "
+                         "through the batch-aware MODEXP_DISPATCH (fused "
+                         "windowed Pallas ladder for kernel-sized batches)")
     args = ap.parse_args()
+    backend = None if args.backend == "auto" else args.backend
 
     key = R.generate_key(bits=args.bits, seed=1)
     msgs = [R.digest_int(f"message-{i}".encode(), args.bits)
             for i in range(args.batch)]
     md = R.messages_to_digits(msgs, key)
 
-    sign = jax.jit(lambda m: R.sign(m, key, backend=args.backend))
-    verify = jax.jit(lambda s: R.verify(s, key, backend=args.backend))
+    sign = jax.jit(lambda m: R.sign(m, key, backend=backend))
+    verify = jax.jit(lambda s: R.verify(s, key, backend=backend))
 
     sigs = sign(md)
     sigs.block_until_ready()

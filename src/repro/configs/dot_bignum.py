@@ -52,6 +52,67 @@ DIV_DISPATCH = DivDispatchConfig()
 
 
 @dataclasses.dataclass(frozen=True)
+class ModExpDispatchConfig:
+    """Dispatch knobs for core/modular.mod_exp (the modexp front door).
+
+    Every backend runs the SAME fixed-window (k-ary) constant-time
+    ladder schedule; these knobs pick the window size and which backend
+    executes it.  ``window_bits`` caps the window chosen by
+    ``pick_modexp_window`` (w=4 is the paper-standard sweet spot: the
+    2**w-entry table stays tiny while the per-bit multiply count drops
+    from 2 to 1 + 1/w).  The fused full-ladder Pallas kernel
+    (kernels/dot_modmul) only amortizes over the batch axis, so below
+    ``fused_min_batch`` independent exponentiations the jnp windowed
+    composition is used instead (same regime as MUL_DISPATCH.
+    kernel_min_batch); ``fused_max_bits`` bounds the kernel's VMEM
+    working set (the 2**w-row power table is the dominant term, see
+    kernels/README.md)."""
+
+    window_bits: int = 4              # max window size w (table = 2**w rows)
+    fused_min_batch: int = 8          # below: jnp windowed ladder
+    fused_max_bits: int = 8192        # above: jnp windowed ladder
+    # Exponents shorter than this skip the fused kernel: at a handful of
+    # windows the table build dominates and a kernel launch cannot pay
+    # for itself (e.g. RSA verify with e = 65537).
+    fused_min_exp_bits: int = 32
+
+
+MODEXP_DISPATCH = ModExpDispatchConfig()
+
+
+def modexp_modmul_count(exp_bits: int, window: int) -> int:
+    """Modular multiplies the windowed ladder schedule performs for an
+    ``exp_bits``-bit exponent at window size w, EXCLUDING the two
+    Montgomery domain transforms (to_mont/from_mont; Barrett has none):
+
+        table build           2**w - 2     (t[2..2**w-1]; t[0], t[1] free)
+        first window          0            (res := table[window 0])
+        remaining windows     (ceil(exp_bits/w) - 1) * (w + 1)
+
+    Always <= exp_bits * (1 + 1/w) + 2**w, vs ~2 * exp_bits for the
+    bit-serial (w=1) ladder; asserted by tests/test_modexp_window.py."""
+    if window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    nwin = -(-max(1, exp_bits) // window)
+    return (1 << window) - 2 + (nwin - 1) * (window + 1)
+
+
+def pick_modexp_window(exp_bits: int, cap: int | None = None) -> int:
+    """Smallest-cost window size <= ``cap`` (default MODEXP_DISPATCH.
+    window_bits) for an ``exp_bits``-bit exponent: argmin of
+    ``modexp_modmul_count`` -- short exponents (RSA e = 65537) get small
+    windows where the 2**w table build would dominate, long exponents
+    saturate at the cap."""
+    cap = cap or MODEXP_DISPATCH.window_bits
+    best, best_cost = 1, None
+    for w in range(1, max(1, cap) + 1):
+        cost = modexp_modmul_count(exp_bits, w)
+        if best_cost is None or cost < best_cost:
+            best, best_cost = w, cost
+    return best
+
+
+@dataclasses.dataclass(frozen=True)
 class DoTBenchConfig:
     operand_bits: Tuple[int, ...] = (
         512, 1024, 2048, 3072, 4096, 6144, 8192, 12288,

@@ -12,9 +12,14 @@ Lazy-digit overflow analysis (why no per-iteration normalization):
   after m iterations digits < 5*m*2**16 -- safe in uint32 for m <= 2**13
   (operands up to 128 Kbit, far beyond RSA sizes).
 
-Exponentiation is constant-time square-and-multiply (both branches
-computed, select by bit) -- matching how crypto libraries avoid key-
-dependent timing.
+Exponentiation is a constant-time fixed-window (k-ary) ladder shared by
+every device backend (_windowed_ladder): a 2**w-entry power table, w
+squarings + one branch-free table gather per window -- ~nbits*(1 + 1/w)
++ 2**w modular multiplies instead of the bit-serial ladder's ~2*nbits,
+with no data-dependent branching on exponent bits (matching how crypto
+libraries avoid key-dependent timing).  On the "pallas" backend the
+WHOLE ladder is one fused kernel launch (kernels/dot_modmul): residue,
+modulus, and power table stay VMEM-resident across all steps.
 
 Backend dispatch
 ----------------
@@ -210,24 +215,17 @@ def barrett_mod_mul(a: jax.Array, b: jax.Array, ctx) -> jax.Array:
     return _barrett_reduce(x, bctx)
 
 
-def _barrett_mod_exp(base: jax.Array, exp_bits: jax.Array, ctx) -> jax.Array:
-    """Constant-time square-and-multiply ladder on plain residues
-    (Barrett needs no domain transform: square always, multiply always,
-    select by the exponent bit)."""
+def _barrett_mod_exp(base: jax.Array, exp_bits: jax.Array, ctx,
+                     window: int | None = None,
+                     unroll: bool = False) -> jax.Array:
+    """Windowed constant-time ladder on plain residues (Barrett needs no
+    domain transform: table entry 0 is the literal digit 1)."""
     bctx = _as_barrett(ctx)
     x = jnp.asarray(base, U32)
-    res0 = jnp.zeros_like(x).at[..., 0].set(1)
-    eb = jnp.asarray(exp_bits, U32)
-    nbits = eb.shape[-1]
-    eb_t = jnp.moveaxis(jnp.broadcast_to(eb, x.shape[:-1] + (nbits,)), -1, 0)
-
-    def step(res, bit):
-        sq = barrett_mod_mul(res, res, bctx)
-        mul = barrett_mod_mul(sq, x, bctx)
-        return jnp.where((bit == 1)[..., None], mul, sq), None
-
-    res, _ = jax.lax.scan(step, res0, eb_t)
-    return res
+    one = jnp.zeros((bctx.m,), U32).at[0].set(1)
+    return _windowed_ladder(
+        lambda a, b: barrett_mod_mul(a, b, bctx), one, x, exp_bits,
+        window, unroll=unroll)
 
 
 def _ge(a: jax.Array, b: jax.Array) -> jax.Array:
@@ -408,21 +406,80 @@ def mod_mul(a: jax.Array, b: jax.Array, ctx,
                  backend=backend), ctx, backend)
 
 
-def _mod_exp_jnp(base: jax.Array, exp_bits: jax.Array, ctx: MontCtx,
-                 lazy: bool = True) -> jax.Array:
-    x = to_mont(jnp.asarray(base, U32), ctx, backend="jnp")
-    one = jnp.asarray(ctx.one_digits, U32)
-    res0 = jnp.broadcast_to(one, x.shape).astype(U32)
+def _windowed_ladder(mm, one, x, exp_bits, window: int | None = None,
+                     unroll: bool = False) -> jax.Array:
+    """The ONE fixed-window (k-ary) constant-time exponentiation schedule
+    shared by every device backend (jnp Montgomery, Barrett; the fused
+    Pallas kernel runs the same schedule inside one launch).
+
+    ``mm(a, b)`` is the backend's modular multiply on (..., m) digit
+    arrays in its own domain; ``one`` is the multiplicative identity in
+    that domain (R mod n for Montgomery, the digit 1 for Barrett); ``x``
+    is the base already in-domain.  Schedule per ``exp_bits`` (MSB-first
+    bits, (nbits,) or (..., nbits)):
+
+      * build the 2**w-entry power table t[j] = x**j (2**w - 2 mults),
+      * res := t[window 0]  (branch-free gather -- saves the w identity
+        squarings a pad-with-leading-zeros ladder would burn, which is
+        also what keeps the multiply count under nbits*(1 + 1/w) + 2**w
+        for ALL nbits, not just multiples of w),
+      * per remaining window: w squarings, then one multiply by the
+        gathered table entry -- square always, multiply always; the
+        exponent only ever feeds branch-free gather indices, never
+        control flow.
+
+    ``unroll=True`` replaces the lax.scan over windows with a Python
+    loop so trace-time mm() calls == runtime modular multiplies (the
+    call-counting test + tiny-exponent callers); results are identical.
+    """
+    from repro.configs.dot_bignum import pick_modexp_window
+    from repro.kernels.common.windows import exponent_windows
+
     eb = jnp.asarray(exp_bits, U32)
     nbits = eb.shape[-1]
-    eb_t = jnp.moveaxis(jnp.broadcast_to(eb, x.shape[:-1] + (nbits,)), -1, 0)
+    w = int(window if window is not None else pick_modexp_window(nbits))
+    if w < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    x = jnp.asarray(x, U32)
+    batch_shape = jnp.broadcast_shapes(x.shape[:-1], eb.shape[:-1])
+    m = x.shape[-1]
+    x = jnp.broadcast_to(x, batch_shape + (m,))
+    wv = exponent_windows(
+        jnp.broadcast_to(eb, batch_shape + (nbits,)), w)   # (..., nwin)
+    nwin = wv.shape[-1]
 
-    def step(res, bit):
-        sq = _mont_mul_jnp(res, res, ctx, lazy)
-        mul = _mont_mul_jnp(sq, x, ctx, lazy)
-        return jnp.where((bit == 1)[..., None], mul, sq), None
+    table = [jnp.broadcast_to(jnp.asarray(one, U32), x.shape), x]
+    for _ in range(2, 1 << w):
+        table.append(mm(table[-1], x))
+    tab = jnp.stack(table[: 1 << w], axis=-2)              # (..., 2**w, m)
 
-    res, _ = jax.lax.scan(step, res0, eb_t)
+    def select(d):
+        idx = d.astype(jnp.int32)[..., None, None]         # (..., 1, 1)
+        return jnp.take_along_axis(tab, idx, axis=-2)[..., 0, :]
+
+    def step(res, d):
+        for _ in range(w):
+            res = mm(res, res)
+        return mm(res, select(d)), None
+
+    res = select(wv[..., 0])
+    if unroll:
+        for j in range(1, nwin):
+            res, _ = step(res, wv[..., j])
+    elif nwin > 1:
+        wv_t = jnp.moveaxis(wv[..., 1:], -1, 0)            # (nwin-1, ...)
+        res, _ = jax.lax.scan(step, res, wv_t)
+    return res
+
+
+def _mod_exp_jnp(base: jax.Array, exp_bits: jax.Array, ctx: MontCtx,
+                 lazy: bool = True, window: int | None = None,
+                 unroll: bool = False) -> jax.Array:
+    x = to_mont(jnp.asarray(base, U32), ctx, backend="jnp")
+    one = jnp.asarray(ctx.one_digits, U32)
+    res = _windowed_ladder(
+        lambda a, b: _mont_mul_jnp(a, b, ctx, lazy), one, x, exp_bits,
+        window, unroll=unroll)
     return from_mont(res, ctx, backend="jnp")
 
 
@@ -449,36 +506,95 @@ def _mod_exp_reference(base, exp_bits, ctx: MontCtx) -> jax.Array:
     return jnp.asarray(out.reshape(batch_shape + (ctx.m,)))
 
 
+def select_modexp_backend(nbits: int, batch: int = 1, ebits: int = 0,
+                          ctx=None) -> str:
+    """Batch-aware modexp dispatch (configs/dot_bignum.MODEXP_DISPATCH),
+    the modexp twin of core/mul.select_method.
+
+    The fused full-ladder Pallas kernel amortizes over the batch axis
+    only, so small batches (and tiny exponents, where the table build
+    dominates) take the jnp windowed composition; a BarrettCtx (even
+    modulus) always routes to the Barrett ladder.  The environment
+    override REPRO_MODEXP_BACKEND wins over everything (ops knob for
+    A/B experiments without code changes)."""
+    import os
+
+    from repro.configs.dot_bignum import MODEXP_DISPATCH as cfg
+
+    env = os.environ.get("REPRO_MODEXP_BACKEND", "")
+    if env:
+        if env not in BACKENDS:
+            raise ValueError(
+                f"REPRO_MODEXP_BACKEND={env!r}; choose from {BACKENDS}")
+        return _resolve_backend(env, ctx)
+    if isinstance(ctx, BarrettCtx):
+        return "barrett"
+    if _DEFAULT_BACKEND != "jnp":
+        # an explicit set_default_backend() choice wins over the
+        # size-based dispatch (force "jnp" via backend= or the env var)
+        return _DEFAULT_BACKEND
+    if (batch >= cfg.fused_min_batch and nbits <= cfg.fused_max_bits
+            and ebits >= cfg.fused_min_exp_bits):
+        return "pallas"
+    return "jnp"
+
+
 def mod_exp(base: jax.Array, exp_bits: jax.Array, ctx,
-            lazy: bool = True, backend: str | None = None) -> jax.Array:
-    """base ** e mod n.
+            lazy: bool = True, backend: str | None = None,
+            window: int | None = None) -> jax.Array:
+    """base ** e mod n via the fixed-window constant-time ladder.
 
     base: (..., m) digits; exp_bits: (nbits,) or (..., nbits) uint32/int32
-    bits MSB-first.  Constant-time ladder: square always, multiply always,
-    select by the exponent bit.  Dispatched to the selected backend; on
-    "pallas" every ladder step is two fused VMEM-resident kernel launches.
-    ``lazy`` applies to the jnp backend only (see mont_mul).  A
-    BarrettCtx (even modulus) auto-routes to the Barrett ladder.
-    """
-    backend = _resolve_backend(backend, ctx)
+    bits MSB-first.  Every backend runs the same windowed schedule
+    (see _windowed_ladder): ~nbits * (1 + 1/w) + 2**w modular multiplies
+    instead of the bit-serial ladder's ~2 * nbits, exponent bits only
+    ever feeding branch-free table gathers.  ``window`` overrides the
+    config-picked window size w (configs/dot_bignum.pick_modexp_window).
+
+    ``backend=None`` auto-selects via select_modexp_backend: the fused
+    full-ladder Pallas kernel (ONE launch per modexp, power table
+    VMEM-resident across all steps) for kernel-sized batches, the jnp
+    windowed composition below that; a BarrettCtx (even modulus)
+    auto-routes to the Barrett ladder.  ``lazy`` applies to the jnp
+    backend only (see mont_mul)."""
+    eb = jnp.asarray(exp_bits, U32)
+    if backend is None:
+        batch = 1
+        for d in jnp.broadcast_shapes(jnp.shape(base)[:-1], eb.shape[:-1]):
+            batch *= int(d)
+        backend = select_modexp_backend(
+            ctx.m * DIGIT_BITS, batch, ebits=eb.shape[-1], ctx=ctx)
+    else:
+        backend = _resolve_backend(backend, ctx)
     if backend == "barrett":
-        return _barrett_mod_exp(base, exp_bits, ctx)
+        return _barrett_mod_exp(base, exp_bits, ctx, window)
     if backend == "jnp":
-        return _mod_exp_jnp(base, exp_bits, ctx, lazy)
+        return _mod_exp_jnp(base, exp_bits, ctx, lazy, window)
     if backend == "pallas":
         from repro.kernels.dot_modmul import ops as _mops
         base = jnp.asarray(base, U32)
-        b2, batch_shape = _flatten_batch(base, ctx.m)
-        eb = jnp.asarray(exp_bits, U32)
+        # broadcast BOTH operands to the joint batch shape before
+        # flattening (shared base x per-lane exponents and vice versa)
+        shape = jnp.broadcast_shapes(
+            base.shape[:-1], eb.shape[:-1]) + (ctx.m,)
+        b2, batch_shape = _flatten_batch(
+            jnp.broadcast_to(base, shape), ctx.m)
         if eb.ndim > 1:
             eb = jnp.broadcast_to(
                 eb, batch_shape + (eb.shape[-1],)).reshape(-1, eb.shape[-1])
-        out = _mops.dot_mod_exp(b2, eb, ctx)
+        out = _mops.dot_mod_exp(b2, eb, ctx, window=window)
         return out.reshape(batch_shape + (ctx.m,))
     return _mod_exp_reference(base, exp_bits, ctx)
 
 
 def exp_bits_msb(e: int, nbits: int | None = None) -> np.ndarray:
+    """MSB-first bit array of e, padded (never truncated) to nbits."""
+    if e < 0:
+        raise ValueError(f"exp_bits_msb: exponent must be >= 0, got {e}")
     nbits = nbits or max(1, e.bit_length())
+    if e.bit_length() > nbits:
+        raise ValueError(
+            f"exp_bits_msb: e needs {e.bit_length()} bits but nbits={nbits} "
+            f"-- refusing to silently truncate the exponent")
     return np.array([(e >> (nbits - 1 - i)) & 1 for i in range(nbits)],
                     np.uint32)

@@ -107,7 +107,11 @@ def messages_to_digits(msgs: list[int], key: RSAKey) -> jnp.ndarray:
 
 def sign(msg_digits: jax.Array, key: RSAKey,
          backend: str | None = None) -> jax.Array:
-    """s = m^d mod n, batched over leading axes."""
+    """s = m^d mod n, batched over leading axes.
+
+    ``backend=None`` routes through core/modular's batch-aware modexp
+    dispatch (MODEXP_DISPATCH): the fused full-ladder Pallas kernel for
+    kernel-sized batches, the jnp windowed ladder below that."""
     bits = M.exp_bits_msb(key.d, key.n.bit_length())
     return M.mod_exp(msg_digits, jnp.asarray(bits), key.ctx,
                      backend=backend)
@@ -115,7 +119,8 @@ def sign(msg_digits: jax.Array, key: RSAKey,
 
 def verify(sig_digits: jax.Array, key: RSAKey,
            backend: str | None = None) -> jax.Array:
-    """m = s^e mod n (fast public exponent)."""
+    """m = s^e mod n (fast public exponent; the windowed ladder picks a
+    small window for the 17-bit e, see pick_modexp_window)."""
     bits = M.exp_bits_msb(key.e)
     return M.mod_exp(sig_digits, jnp.asarray(bits), key.ctx,
                      backend=backend)
@@ -126,7 +131,9 @@ def decrypt_crt(c_digits: jax.Array, key: RSAKey,
     """m = c^d mod n via the Chinese Remainder Theorem: two HALF-SIZE
     modexps (c^{d mod p-1} mod p, c^{d mod q-1} mod q) recombined with
     Garner's formula -- ~4x fewer digit-multiply work than the full
-    ladder, the standard RSA private-key optimization.
+    ladder, the standard RSA private-key optimization.  Both half-size
+    modexps ride the windowed ladder via the same backend dispatch as
+    sign/verify (``backend=None`` -> MODEXP_DISPATCH auto-select).
 
     The recombination runs on device on the division subsystem: p and q
     are HOST-known key constants, so every mod-p/mod-q reduction is a

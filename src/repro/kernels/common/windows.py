@@ -1,0 +1,33 @@
+"""Exponent bit -> k-ary window packing, shared by every modexp ladder.
+
+The ONE home of the packing (the jnp/Barrett ladders in core/modular.py
+and the fused-ladder wrapper in kernels/dot_modmul/ops.py all call it,
+so every backend walks the identical schedule).  Lives in
+kernels/common -- pure jnp, no Pallas import -- because core must not
+depend on the kernel packages (which pull in jax.experimental.pallas)
+for a plain jnp/barrett exponentiation.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+
+def exponent_windows(exp_bits, window: int):
+    """(..., nbits) MSB-first exponent bits -> (..., nwin) k-ary window
+    values (each < 2**window), MSB-first, left-padded with zero bits so
+    window boundaries align with the LEAST significant bit.
+    """
+    w = int(window)
+    if w < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    eb = jnp.asarray(exp_bits, U32)
+    nbits = eb.shape[-1]
+    nwin = -(-nbits // w)
+    pad = nwin * w - nbits
+    if pad:
+        eb = jnp.concatenate(
+            [jnp.zeros(eb.shape[:-1] + (pad,), U32), eb], axis=-1)
+    weights = jnp.asarray([1 << (w - 1 - k) for k in range(w)], U32)
+    return jnp.sum(eb.reshape(eb.shape[:-1] + (nwin, w)) * weights, axis=-1)

@@ -23,6 +23,15 @@ radix-complement subtract selects t or t - n without branching.
 n0p and m are BAKED into the kernel (host-side Montgomery constants --
 one specialization per modulus, exactly the serving pattern: a key is
 loaded once, then millions of modmuls reuse the compiled kernel).
+
+``make_ladder_call`` composes the same multiply into the fused
+full-ladder windowed modexp kernel: ONE launch runs the entire k-ary
+exponentiation (Montgomery entry, 2**w-entry power table build, all
+squarings and branch-free one-hot table selects, Montgomery exit) with
+everything VMEM-resident -- versus two launches per exponent bit when
+the ladder is composed outside the kernel.  Its loops are
+lax.fori_loops (see cios_iterations_loop) so compile time stays flat
+in nbits.
 """
 from __future__ import annotations
 
@@ -90,6 +99,45 @@ def cond_subtract(t, n):
     return jnp.where(ge == 1, sn[:, :m], t[:, :m])
 
 
+def cios_iterations_loop(a, b, n, n0p):
+    """cios_iterations with the digit loop as a lax.fori_loop instead of
+    a trace-time unroll.
+
+    Semantically identical; used by the fused ladder kernel, where the
+    unrolled form would inline m iterations into EVERY one of the
+    ~nbits*(1+1/w) multiplies of the window loop body and blow up
+    compile time.  The single-multiply kernel keeps the unrolled form
+    (static slices, nothing else in the launch to amortize against).
+    """
+    tb, m = a.shape
+    n0p = np.uint32(n0p)
+
+    def body(i, acc):
+        ai = jax.lax.dynamic_slice_in_dim(a, i, 1, axis=1)   # (TB, 1)
+        prod = ai * b                             # exact uint32 products
+        acc = acc.at[:, :m].add(prod & DMASK)
+        acc = acc.at[:, 1:m + 1].add(prod >> DBITS)
+        u = ((acc[:, 0:1] & DMASK) * n0p) & DMASK
+        prod2 = u * n                             # (TB, m), exact uint32
+        acc = acc.at[:, :m].add(prod2 & DMASK)
+        acc = acc.at[:, 1:m + 1].add(prod2 >> DBITS)
+        c0 = acc[:, 0:1] >> DBITS
+        acc = jnp.concatenate(
+            [acc[:, 1:], jnp.zeros((tb, 1), U32)], axis=1)
+        acc = acc.at[:, 0:1].add(c0)
+        return acc
+
+    return jax.lax.fori_loop(0, m, body, jnp.zeros((tb, m + 1), U32))
+
+
+def mont_mul_block(a, b, n, n0p):
+    """Full normalized Montgomery product on (TB, m) blocks (loop CIOS +
+    carry resolve + branch-free conditional subtract) -- the multiply
+    the fused ladder kernel composes ~nbits*(1+1/w) times per launch."""
+    acc = cios_iterations_loop(a, b, n, n0p)
+    return cond_subtract(normalize_static(acc), n)
+
+
 def make_mont_kernel(m: int, n0p: int):
     """Kernel body specialized to a modulus width m and constant n0p."""
 
@@ -102,6 +150,85 @@ def make_mont_kernel(m: int, n0p: int):
         out_ref[...] = cond_subtract(t, n)
 
     return mont_mul_kernel
+
+
+def ladder_live_arrays(window: int) -> int:
+    """Live (TB, ~m) uint32 arrays in the fused ladder kernel: the
+    2**w-row power table dominates, plus the same ~12 CIOS/normalize
+    temps as the single-multiply kernel.  Sizes the batch tile."""
+    return (1 << window) + LIVE_U32_ARRAYS
+
+
+def make_ladder_kernel(m: int, n0p: int, window: int, nwin: int):
+    """Fused full-ladder windowed modexp kernel body.
+
+    One program owns a (TB, m) residue block and runs the ENTIRE k-ary
+    exponentiation there -- to-Montgomery transform, 2**w-entry power
+    table build, all nwin windows (w squarings + one branch-free one-hot
+    table select + multiply each), and the from-Montgomery exit -- so a
+    modexp is ONE kernel launch instead of two per exponent bit, and the
+    residue/modulus/table never leave VMEM.  Per-lane exponents arrive
+    as a (TB, nwin) array of window values (MSB-first, each < 2**w);
+    they only ever feed the one-hot select masks, never control flow,
+    so the ladder is constant-time in structure.  w, nwin, m, n0p are
+    all baked (one specialization per modulus/exponent geometry)."""
+    nt = 1 << window
+
+    def ladder_kernel(base_ref, win_ref, n_ref, r2_ref, one_ref, out_ref):
+        base = base_ref[...]                      # (TB, m) digits < 2**16
+        wins = win_ref[...]                       # (TB, nwin) window values
+        n = n_ref[...]                            # (1, m) modulus digits
+        tb = base.shape[0]
+
+        def mm(x, y):
+            return mont_mul_block(x, y, n, n0p)
+
+        x = mm(base, jnp.broadcast_to(r2_ref[...], base.shape))   # to Mont
+        table = [jnp.broadcast_to(one_ref[...], base.shape), x]
+        for _ in range(2, nt):
+            table.append(mm(table[-1], x))
+        tab = jnp.stack(table[:nt])               # (2**w, TB, m) in VMEM
+        iota = jax.lax.broadcasted_iota(U32, (nt, tb), 0)
+
+        def select(j):
+            d = jax.lax.dynamic_slice_in_dim(wins, j, 1, axis=1)  # (TB, 1)
+            onehot = (iota == d.reshape(1, tb)).astype(U32)       # (2**w, TB)
+            return jnp.sum(tab * onehot[:, :, None], axis=0)      # (TB, m)
+
+        def win_step(j, res):
+            for _ in range(window):
+                res = mm(res, res)
+            return mm(res, select(j))
+
+        res = jax.lax.fori_loop(1, nwin, win_step, select(0))
+        plain_one = (jax.lax.broadcasted_iota(U32, (1, m), 1) == 0)
+        out_ref[...] = mm(res, jnp.broadcast_to(plain_one.astype(U32),
+                                                base.shape))      # exit Mont
+
+    return ladder_kernel
+
+
+@functools.lru_cache(maxsize=64)
+def make_ladder_call(batch_tile: int, m: int, grid: int, n0p: int,
+                     window: int, nwin: int, interpret: bool):
+    """pallas_call for the fused full-ladder windowed modexp.
+
+    Inputs: base (grid*TB, m), window values (grid*TB, nwin), and the
+    (1, m) modulus / R^2 / R-mod-n rows broadcast to every program.
+    Output: (grid*TB, m) digits of base**e mod n.
+    """
+    return pl.pallas_call(
+        make_ladder_kernel(m, n0p, window, nwin),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((batch_tile, m), lambda i: (i, 0)),
+                  pl.BlockSpec((batch_tile, nwin), lambda i: (i, 0)),
+                  pl.BlockSpec((1, m), lambda i: (0, 0)),
+                  pl.BlockSpec((1, m), lambda i: (0, 0)),
+                  pl.BlockSpec((1, m), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((batch_tile, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid * batch_tile, m), U32),
+        interpret=interpret,
+    )
 
 
 @functools.lru_cache(maxsize=64)

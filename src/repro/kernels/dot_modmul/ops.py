@@ -1,14 +1,16 @@
-"""Jit'd wrappers for the fused Montgomery-multiply Pallas kernel.
+"""Jit'd wrappers for the fused Montgomery-multiply / modexp kernels.
 
 Mirrors dot_add/ops: interpret mode auto-selected on CPU, batch padded to
-the tile size and trimmed after the call.  The kernel is specialized per
-modulus (n0p baked in); the modulus digit vector rides along as a (1, m)
-operand broadcast to every program.
+the tile size and trimmed after the call.  The kernels are specialized
+per modulus (n0p baked in); the modulus digit vector rides along as a
+(1, m) operand broadcast to every program.
 
-``dot_mod_exp`` is the batched constant-time square-and-multiply driver:
-both branches computed every bit, result selected by the exponent bit --
-each ladder step is two fused kernel launches whose (TB, m) working set
-stays in VMEM for the whole CIOS loop.
+``dot_mod_exp`` is the fused full-ladder windowed modexp: the exponent
+bits are packed into k-ary window values host/jnp-side and the ENTIRE
+constant-time ladder (power table build, all squarings, branch-free
+table selects, Montgomery entry/exit) runs inside ONE kernel launch
+whose (TB, m) residue and (2**w, TB, m) power table stay VMEM-resident
+throughout -- versus the PR-3 driver's two launches per exponent bit.
 
 Accepts any Montgomery context exposing ``m / n0p / n_digits / r2_digits
 / one_digits`` (core.modular.MontCtx); kept duck-typed so the kernel
@@ -21,8 +23,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.configs.dot_bignum import pick_modexp_window
 from repro.kernels.common import autotune, tiling
 from repro.kernels.common.runtime import auto_interpret as _auto_interpret
+from repro.kernels.common.windows import exponent_windows
 from repro.kernels.dot_modmul import kernel as K
 
 U32 = jnp.uint32
@@ -50,33 +54,19 @@ def _mont_mul_call(a, b, n_row, tb: int, n0p: int, interpret: bool):
     return out[:batch]
 
 
-@functools.partial(jax.jit, static_argnames=("tb", "n0p", "interpret"))
-def _mod_exp_call(base, eb, n_row, r2_row, one_row, tb: int, n0p: int,
-                  interpret: bool):
+@functools.partial(jax.jit,
+                   static_argnames=("tb", "n0p", "window", "interpret"))
+def _ladder_call(base, wins, n_row, r2_row, one_row, tb: int, n0p: int,
+                 window: int, interpret: bool):
     batch, m = base.shape
     pad = (-batch) % tb
     if pad:
         base = jnp.pad(base, ((0, pad), (0, 0)))
-        eb = jnp.pad(eb, ((0, pad), (0, 0)))
-    bp = base.shape[0]
-    grid = bp // tb
-    call = K.make_call(tb, m, grid, n0p, interpret)
-
-    def mm(x, y):
-        return call(x, y, n_row)
-
-    x = mm(base, jnp.broadcast_to(r2_row, (bp, m)))   # to Montgomery form
-    res0 = jnp.broadcast_to(one_row, (bp, m)).astype(U32)
-    eb_t = jnp.moveaxis(eb, -1, 0)                    # (nbits, bp)
-
-    def step(res, bit):
-        sq = mm(res, res)
-        mul = mm(sq, x)
-        return jnp.where((bit == 1)[:, None], mul, sq), None
-
-    res, _ = jax.lax.scan(step, res0, eb_t)
-    plain_one = jnp.zeros((1, m), U32).at[0, 0].set(1)
-    out = mm(res, jnp.broadcast_to(plain_one, (bp, m)))  # leave Mont form
+        # padded lanes exponentiate to 0**0 = 1 and are trimmed below
+        wins = jnp.pad(wins, ((0, pad), (0, 0)))
+    grid = base.shape[0] // tb
+    out = K.make_ladder_call(tb, m, grid, n0p, window, wins.shape[-1],
+                             interpret)(base, wins, n_row, r2_row, one_row)
     return out[:batch]
 
 
@@ -97,31 +87,35 @@ def dot_mont_mul(a, b, ctx, interpret=None):
     return _mont_mul_call(a, b, n_row, tb, n0p, interpret)
 
 
-def dot_mod_exp(base, exp_bits, ctx, interpret=None):
-    """(batch, m) digits ** exp -> (batch, m) digits of base**e mod n.
+def dot_mod_exp(base, exp_bits, ctx, window=None, interpret=None):
+    """(batch, m) digits ** exp -> (batch, m) digits of base**e mod n,
+    the whole windowed ladder fused into ONE kernel launch.
 
-    exp_bits: (nbits,) or (batch, nbits) bits MSB-first (uint32/int32).
-    Constant-time ladder: square always, multiply always, select by bit.
+    exp_bits: (nbits,) or (batch, nbits) bits MSB-first (uint32/int32);
+    per-lane exponents share nbits but may differ per batch element.
+    ``window`` overrides the config-picked window size w.  Constant-time
+    in structure: exponent windows feed one-hot selects, never branches.
     """
     assert ctx.m <= MAX_DIGITS, "lazy digits overflow uint32 beyond 2**13"
     base = jnp.asarray(base, U32)
     eb = jnp.asarray(exp_bits, U32)
     if eb.ndim == 1:
         eb = jnp.broadcast_to(eb, (base.shape[0], eb.shape[-1]))
+    w = int(window if window is not None
+            else pick_modexp_window(eb.shape[-1]))
+    wins = exponent_windows(eb, w)
     n_row = jnp.asarray(ctx.n_digits, U32)[None, :]
     r2_row = jnp.asarray(ctx.r2_digits, U32)[None, :]
     one_row = jnp.asarray(ctx.one_digits, U32)[None, :]
     interpret = _auto_interpret(interpret)
     n0p = int(ctx.n0p)
     batch, m = base.shape
-    # tile chosen outside jit (same pallas_call as the mont-mul entry, so
-    # the sweep shares its cache key and its VMEM-derived tile cap)
-    tb = autotune.pick_tile(
-        "dot_modmul", (m, batch, 16, n0p, interpret),
-        _tile_for(m, batch), batch,
-        run=lambda t: _mont_mul_call(
-            base, jnp.broadcast_to(r2_row, base.shape), n_row, t, n0p,
-            interpret),
+    # Heuristic tile only: the 2**w-row power table inflates the live
+    # working set (ladder_live_arrays), and a timed autotune sweep would
+    # re-run the WHOLE ladder per candidate -- not worth it for a kernel
+    # whose launch count is already 1 per modexp.
+    tb = tiling.batch_tile(
+        m, batch, budget=tiling.budget_words(K.ladder_live_arrays(w)),
         max_tile=K.MAX_TILE)
-    return _mod_exp_call(base, eb, n_row, r2_row, one_row, tb, n0p,
-                         interpret)
+    return _ladder_call(base, wins, n_row, r2_row, one_row, tb, n0p, w,
+                        interpret)

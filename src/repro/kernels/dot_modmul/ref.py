@@ -46,3 +46,17 @@ def mod_exp_ref(base_digits: np.ndarray, e: int, n: int) -> np.ndarray:
         x = L.limbs_to_int(base_digits[i], DIGIT_BITS)
         outs.append(L.int_to_limbs(pow(x, e, n), m, DIGIT_BITS))
     return np.stack(outs)
+
+
+def mod_exp_ref_lanes(base_digits: np.ndarray, exps: list[int],
+                      n: int) -> np.ndarray:
+    """Per-lane exponent oracle for the batched-exponent ladder variant:
+    lane i computes base[i] ** exps[i] mod n (host pow, exact)."""
+    base_digits = np.asarray(base_digits)
+    m = base_digits.shape[-1]
+    assert base_digits.shape[0] == len(exps)
+    outs = []
+    for i, e in enumerate(exps):
+        x = L.limbs_to_int(base_digits[i], DIGIT_BITS)
+        outs.append(L.int_to_limbs(pow(x, int(e), n), m, DIGIT_BITS))
+    return np.stack(outs)

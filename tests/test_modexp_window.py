@@ -1,0 +1,392 @@
+"""Windowed (k-ary) modexp ladder: exponent edge cases, window sizes,
+modmul-count bound, constant-time structure, and dispatch.
+
+Every device backend (jnp Montgomery, Barrett, fused Pallas ladder)
+runs the SAME fixed-window schedule; these tests pin its correctness
+against the python-int oracle at 256-2048 bits for BOTH modulus
+parities, assert the ~nbits*(1 + 1/w) + 2**w multiply count the window
+restructuring exists for, and verify the ladder never branches on
+exponent bits (identical compiled HLO for different exponent values).
+
+Device calls are jitted: eagerly, every modular multiply re-traces its
+inner carry scan (fresh closures), which is ~0.5 s/multiply of pure
+compile overhead -- the jitted ladder compiles each call site once.
+The multiply-count tests skip execution entirely (jax.make_jaxpr
+traces the unrolled driver, where trace-time calls == runtime calls).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.dot_bignum import (MODEXP_DISPATCH, modexp_modmul_count,
+                                      pick_modexp_window)
+from repro.core import limbs as L
+from repro.core import modular as M
+from repro.kernels.common.windows import exponent_windows
+
+RNG = np.random.default_rng(17)
+
+DEVICE_BACKENDS = ("jnp", "pallas", "barrett")
+
+
+def _modulus(nbits, parity="odd"):
+    n = L.random_bigints(RNG, 1, nbits)[0] | (1 << (nbits - 1))
+    return (n | 1) if parity == "odd" else (n & ~1)
+
+
+def _ctx(n, nbits):
+    return M.mont_setup(n, nbits) if n % 2 else M.barrett_setup(n, nbits)
+
+
+def _digits(ints, m):
+    return jnp.asarray(np.stack([L.int_to_limbs(v, m, 16) for v in ints]))
+
+
+def _mod_exp_jit(a, eb, ctx, **kw):
+    return jax.jit(lambda v, b: M.mod_exp(v, b, ctx, **kw))(a, eb)
+
+
+def _check(out, xs, e, n):
+    for i, x in enumerate(xs):
+        assert L.limbs_to_int(np.asarray(out)[i], 16) == pow(x, e, n), i
+
+
+# ---------------------------------------------------------------------------
+# exponent edge cases
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_exponent_edge_cases(backend):
+    """e=0 (-> 1), e=1 (-> x), all-ones exponent (every window maxed),
+    and leading-zero bits (nbits >> e.bit_length) on every backend."""
+    nbits = 192
+    n = _modulus(nbits)
+    ctx = M.mont_setup(n, nbits)
+    xs = [0, 1, n - 1] + [v % n for v in L.random_bigints(RNG, 5, nbits)]
+    a = _digits(xs, ctx.m)
+    cases = [
+        (0, 1),                      # e=0: result 1 even for base 0
+        (1, 1),
+        ((1 << 48) - 1, 48),         # all-ones: every table row exercised
+        (5, 48),                     # 45 leading-zero bits
+        (65537, 17),                 # the RSA public exponent
+    ]
+    for e, ebits in cases:
+        eb = jnp.asarray(M.exp_bits_msb(e, ebits))
+        out = _mod_exp_jit(a, eb, ctx, backend=backend)
+        _check(out, xs, e, n)
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_per_lane_exponents(backend):
+    """Batch of DISTINCT per-lane exponents (incl. 0/1/leading-zero
+    lanes), shared modulus -- the throughput workload variant."""
+    nbits = 192
+    n = _modulus(nbits)
+    ctx = M.mont_setup(n, nbits)
+    xs = [v % n for v in L.random_bigints(RNG, 8, nbits)]
+    es = [0, 1, 3, (1 << 48) - 1] + [int(v) | 1
+                                     for v in L.random_bigints(RNG, 4, 48)]
+    eb = jnp.asarray(np.stack([M.exp_bits_msb(e, 48) for e in es]))
+    out = np.asarray(_mod_exp_jit(_digits(xs, ctx.m), eb, ctx,
+                                  backend=backend))
+    for i, (x, e) in enumerate(zip(xs, es)):
+        assert L.limbs_to_int(out[i], 16) == pow(x, e, n), (i, e)
+
+
+# ---------------------------------------------------------------------------
+# window sizes vs the oracle, both modulus parities, 256-2048 bits
+# ---------------------------------------------------------------------------
+
+# (modulus bits, exponent bits): big widths are slow-marked and use a
+# shorter exponent -- they pin digit-width correctness, which does not
+# depend on ladder length (exponent structure is covered at 256/512).
+WIDTHS = [(256, 96), pytest.param(512, 96, marks=pytest.mark.slow),
+          pytest.param(1024, 32, marks=pytest.mark.slow),
+          pytest.param(2048, 32, marks=pytest.mark.slow)]
+
+
+@pytest.mark.parametrize("nbits,ebits", WIDTHS)
+@pytest.mark.parametrize("parity", ["odd", "even"])
+def test_window_sizes_vs_oracle(nbits, ebits, parity):
+    """w in {1, 2, 4, 5} all agree with python pow at both parities
+    (odd -> Montgomery windowed ladder, even -> Barrett windowed
+    ladder via the auto-route)."""
+    n = _modulus(nbits, parity)
+    ctx = _ctx(n, nbits)
+    e = int(L.random_bigints(RNG, 1, ebits)[0]) | (1 << (ebits - 1)) | 1
+    eb = jnp.asarray(M.exp_bits_msb(e, ebits))
+    xs = [v % n for v in L.random_bigints(RNG, 2, nbits)]
+    a = _digits(xs, ctx.m)
+    for w in (1, 2, 4, 5):
+        out = _mod_exp_jit(a, eb, ctx, window=w,
+                           backend="barrett" if parity == "even" else "jnp")
+        _check(out, xs, e, n)
+
+
+@pytest.mark.parametrize("nbits,ebits",
+                         [(256, 256),
+                          pytest.param(1024, 1024, marks=pytest.mark.slow),
+                          pytest.param(2048, 2048, marks=pytest.mark.slow)])
+def test_fused_ladder_full_width_oracle(nbits, ebits):
+    """The fused Pallas ladder at full-width exponents (the RSA-sign
+    shape); 1024/2048-bit are the slow-marked heavyweight oracles."""
+    n = _modulus(nbits)
+    ctx = M.mont_setup(n, nbits)
+    e = int(L.random_bigints(RNG, 1, ebits)[0]) | (1 << (ebits - 1)) | 1
+    eb = jnp.asarray(M.exp_bits_msb(e, ebits))
+    xs = [v % n for v in L.random_bigints(RNG, 3, nbits)]
+    out = _mod_exp_jit(_digits(xs, ctx.m), eb, ctx, backend="pallas")
+    _check(out, xs, e, n)
+
+
+@pytest.mark.parametrize("w", [1, 2, 4, 5])
+def test_fused_ladder_window_sizes(w):
+    """Window override reaches the kernel (one specialization per w)."""
+    nbits = 128
+    n = _modulus(nbits)
+    ctx = M.mont_setup(n, nbits)
+    e = int(L.random_bigints(RNG, 1, 40)[0]) | 1
+    eb = jnp.asarray(M.exp_bits_msb(e, 40))
+    xs = [v % n for v in L.random_bigints(RNG, 9, nbits)]
+    out = _mod_exp_jit(_digits(xs, ctx.m), eb, ctx, backend="pallas",
+                       window=w)
+    _check(out, xs, e, n)
+
+
+def test_shared_base_batched_exponents_auto_dispatch():
+    """Fixed base (m,) x per-lane exponents (batch, nbits) on the
+    DEFAULT backend: dispatch counts the exponent's batch dims, so the
+    pallas branch must broadcast the base UP to the joint batch shape
+    (the DH fixed-generator workload; regression -- this crashed when
+    the fused-ladder branch flattened only the base's batch shape)."""
+    nbits = 128
+    n = _modulus(nbits)
+    ctx = M.mont_setup(n, nbits)
+    g = _digits([2], ctx.m)[0]                     # (m,): shared base
+    es = [int(v) | 1 for v in L.random_bigints(RNG, 8, 48)]
+    eb = jnp.asarray(np.stack([M.exp_bits_msb(e, 48) for e in es]))
+    out = np.asarray(_mod_exp_jit(g, eb, ctx))     # batch 8 -> fused ladder
+    for i, e in enumerate(es):
+        assert L.limbs_to_int(out[i], 16) == pow(2, e, n), (i, e)
+
+
+def test_window_zero_rejected():
+    nbits = 128
+    n = _modulus(nbits)
+    ctx = M.mont_setup(n, nbits)
+    a = _digits([2], ctx.m)
+    eb = jnp.asarray(M.exp_bits_msb(5, 8))
+    for w in (0, -1):
+        with pytest.raises(ValueError, match="window"):
+            M.mod_exp(a, eb, ctx, backend="jnp", window=w)
+
+
+def test_unrolled_ladder_matches_scan():
+    """unroll=True (the call-counting path) and the lax.scan window loop
+    are the same schedule -- bit-identical digits."""
+    nbits, ebits, w = 128, 16, 4
+    n = _modulus(nbits)
+    ctx = M.mont_setup(n, nbits)
+    e = int(L.random_bigints(RNG, 1, ebits)[0]) | 1
+    eb = jnp.asarray(M.exp_bits_msb(e, ebits))
+    xs = [v % n for v in L.random_bigints(RNG, 4, nbits)]
+    a = _digits(xs, ctx.m)
+    got_u = np.asarray(jax.jit(
+        lambda v: M._mod_exp_jnp(v, eb, ctx, window=w, unroll=True))(a))
+    got_s = np.asarray(jax.jit(
+        lambda v: M._mod_exp_jnp(v, eb, ctx, window=w))(a))
+    np.testing.assert_array_equal(got_u, got_s)
+    _check(got_s, xs, e, n)
+
+
+# ---------------------------------------------------------------------------
+# modmul-count bound (the point of the window restructuring)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("w", [1, 2, 4, 5])
+@pytest.mark.parametrize("ebits", [64, 96])
+def test_modmul_count_bound(w, ebits, monkeypatch):
+    """The windowed ladder performs <= nbits*(1 + 1/w) + 2**w modular
+    multiplies (vs ~2*nbits for the PR-3 bit-serial ladder), counted by
+    intercepting the backend multiply while TRACING the unrolled driver
+    (jax.make_jaxpr: trace-time calls == runtime multiplies there, no
+    execution; scan/unroll equivalence is pinned by
+    test_unrolled_ladder_matches_scan)."""
+    nbits = 128
+    n = _modulus(nbits)
+    ctx = M.mont_setup(n, nbits)
+    e = int(L.random_bigints(RNG, 1, ebits)[0]) | (1 << (ebits - 1))
+    eb = jnp.asarray(M.exp_bits_msb(e, ebits))
+    a = _digits([v % n for v in L.random_bigints(RNG, 2, nbits)], ctx.m)
+
+    calls = {"n": 0}
+    real = M._mont_mul_jnp
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(M, "_mont_mul_jnp", counting)
+    jax.make_jaxpr(
+        lambda v: M._mod_exp_jnp(v, eb, ctx, window=w, unroll=True))(a)
+    bound = ebits * (1 + 1 / w) + (1 << w)
+    # +2: the Montgomery domain entry/exit multiplies (to_mont/from_mont)
+    assert calls["n"] == modexp_modmul_count(ebits, w) + 2
+    assert calls["n"] <= bound, (calls["n"], bound)
+    if w >= 4:
+        # decisively under the bit-serial ladder's 2 multiplies per bit
+        assert calls["n"] < 2 * ebits
+
+
+def test_barrett_ladder_count_bound(monkeypatch):
+    """Barrett runs the same schedule with no domain transforms."""
+    nbits, ebits, w = 128, 64, 4
+    n = _modulus(nbits, "even")
+    ctx = M.barrett_setup(n, nbits)
+    e = int(L.random_bigints(RNG, 1, ebits)[0]) | (1 << (ebits - 1))
+    eb = jnp.asarray(M.exp_bits_msb(e, ebits))
+    a = _digits([v % n for v in L.random_bigints(RNG, 2, nbits)], ctx.m)
+
+    calls = {"n": 0}
+    real = M.barrett_mod_mul
+
+    def counting(*args, **kwargs):
+        calls["n"] += 1
+        return real(*args, **kwargs)
+
+    monkeypatch.setattr(M, "barrett_mod_mul", counting)
+    jax.make_jaxpr(
+        lambda v: M._barrett_mod_exp(v, eb, ctx, window=w, unroll=True))(a)
+    assert calls["n"] == modexp_modmul_count(ebits, w)
+    assert calls["n"] <= ebits * (1 + 1 / w) + (1 << w)
+
+
+# ---------------------------------------------------------------------------
+# constant-time structure
+# ---------------------------------------------------------------------------
+
+def _branch_prims(jaxpr, acc):
+    """Collect cond/switch primitive names appearing anywhere in a
+    (closed) jaxpr, recursing into sub-jaxprs (scan/while bodies)."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name in ("cond", "switch"):
+            acc.add(eqn.primitive.name)
+        for v in eqn.params.values():
+            objs = v if isinstance(v, (list, tuple)) else (v,)
+            for o in objs:
+                if hasattr(o, "eqns"):            # raw Jaxpr
+                    _branch_prims(o, acc)
+                elif hasattr(o, "jaxpr"):         # ClosedJaxpr
+                    _branch_prims(o.jaxpr, acc)
+    return acc
+
+
+@pytest.mark.parametrize("backend", DEVICE_BACKENDS)
+def test_identical_hlo_for_different_exponents(backend):
+    """No data-dependent branching on exponent bits: different exponent
+    VALUES (same width) must compile to identical HLO, and -- the check
+    with teeth, since a traced exponent can never change the lowering
+    by construction -- the ladder's jaxpr must contain NO cond/switch
+    primitives at all: the exponent only ever feeds branch-free table
+    gathers/selects.  (Barrett is exempt from the structural check: its
+    reduction uses a bounded while-loop correction keyed on residue
+    magnitude, not on exponent bits.)"""
+    nbits, ebits = 128, 32
+    n = _modulus(nbits)
+    ctx = M.mont_setup(n, nbits)
+    a = _digits([v % n for v in L.random_bigints(RNG, 8, nbits)], ctx.m)
+
+    def f(x, eb):
+        return M.mod_exp(x, eb, ctx, backend=backend)
+
+    texts = []
+    for e in (0, 1, 65537, (1 << 32) - 1):
+        eb = jnp.asarray(M.exp_bits_msb(e, ebits))
+        texts.append(jax.jit(f).lower(a, eb).compile().as_text())
+    assert texts[0] == texts[1] == texts[2] == texts[3]
+    if backend != "barrett":
+        eb = jnp.asarray(M.exp_bits_msb(65537, ebits))
+        prims = _branch_prims(jax.make_jaxpr(f)(a, eb).jaxpr, set())
+        assert not prims, f"data-dependent branching found: {prims}"
+
+
+# ---------------------------------------------------------------------------
+# dispatch + helpers
+# ---------------------------------------------------------------------------
+
+def test_select_modexp_backend_batch_aware():
+    cfg = MODEXP_DISPATCH
+    big = cfg.fused_min_batch
+    assert M.select_modexp_backend(512, batch=big, ebits=512) == "pallas"
+    assert M.select_modexp_backend(512, batch=big - 1, ebits=512) == "jnp"
+    # tiny exponents: table build dominates, kernel launch can't pay
+    assert M.select_modexp_backend(
+        512, batch=big, ebits=cfg.fused_min_exp_bits - 1) == "jnp"
+    # beyond the kernel's VMEM bound
+    assert M.select_modexp_backend(
+        cfg.fused_max_bits + 16, batch=big, ebits=512) == "jnp"
+    # even modulus always routes to Barrett
+    bctx = M.barrett_setup(_modulus(128, "even"), 128)
+    assert M.select_modexp_backend(128, batch=big, ebits=128,
+                                   ctx=bctx) == "barrett"
+
+
+def test_modexp_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_MODEXP_BACKEND", "jnp")
+    assert M.select_modexp_backend(512, batch=64, ebits=512) == "jnp"
+    monkeypatch.setenv("REPRO_MODEXP_BACKEND", "nope")
+    with pytest.raises(ValueError, match="REPRO_MODEXP_BACKEND"):
+        M.select_modexp_backend(512, batch=64, ebits=512)
+
+
+def test_pick_modexp_window():
+    assert pick_modexp_window(1024) == MODEXP_DISPATCH.window_bits
+    assert pick_modexp_window(1) == 1
+    # short exponents get small windows (w=4's 14-multiply table build
+    # would cost more than it saves at e = 65537)
+    w17 = pick_modexp_window(17)
+    assert w17 < 4
+    assert modexp_modmul_count(17, w17) <= modexp_modmul_count(17, 1)
+    with pytest.raises(ValueError):
+        modexp_modmul_count(64, 0)
+
+
+def test_exponent_windows_packing():
+    """Window values must re-assemble to the exponent (MSB-first, LSB-
+    aligned windows) for w dividing and not dividing nbits."""
+    e = 0b1011_0110_001
+    for w in (1, 3, 4, 5):
+        eb = jnp.asarray(M.exp_bits_msb(e, 11))
+        wv = np.asarray(exponent_windows(eb, w))
+        got = 0
+        for d in wv:
+            got = (got << w) | int(d)
+        assert got == e, w
+
+
+def test_exp_bits_msb_rejects_truncation():
+    with pytest.raises(ValueError, match="truncate"):
+        M.exp_bits_msb(65537, 16)
+    with pytest.raises(ValueError, match=">= 0"):
+        M.exp_bits_msb(-1)
+    np.testing.assert_array_equal(
+        M.exp_bits_msb(5, 6), np.array([0, 0, 0, 1, 0, 1], np.uint32))
+
+
+def test_default_dispatch_used_by_rsa():
+    """rsa.sign with backend=None routes through the batch-aware
+    dispatch and still matches the python oracle (small batch -> jnp
+    windowed; kernel-sized batch -> fused pallas ladder)."""
+    from repro.core import rsa as R
+    key = R.generate_key(bits=192, seed=3)
+    msgs = [R.digest_int(f"w{i}".encode(), key.bits) for i in range(8)]
+    md = R.messages_to_digits(msgs, key)
+    sigs = np.asarray(jax.jit(lambda x: R.sign(x, key))(md))  # batch 8: fused
+    for i, m in enumerate(msgs):
+        assert L.limbs_to_int(sigs[i], 16) == pow(m % key.n, key.d, key.n), i
+    env = os.environ.get("REPRO_MODEXP_BACKEND")
+    assert env is None, "test assumes no backend override in the env"
