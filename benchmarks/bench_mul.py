@@ -5,7 +5,9 @@ kernel), MXU Toeplitz (jnp + Pallas kernel), shared-accumulator
 schoolbook (Gueron-style RAW chain); then the large-operand grid where
 the unified pipeline's backends compete head-to-head -- the jnp
 Karatsuba composition (per-level carry resolves) vs the fused
-Karatsuba-over-VnC kernel (one launch, one resolve).
+Karatsuba-over-VnC kernel (one launch, one resolve); then the
+huge-operand NTT/CRT tier (8192..65536 bits, one fused transform launch
+per CRT prime) against the jnp Karatsuba fallback it replaces.
 
 Emits machine-readable records (op, bits, batch, backend, ns/op,
 speedup-vs-jnp) when driven through benchmarks/run.py --json-out; the
@@ -96,6 +98,38 @@ def run(full: bool = False, smoke: bool = False, records=None):
             out.append(row(f"mul/{nbits}b/{method}", t / batch, tag))
             record(records, op="mul", bits=nbits, batch=batch, backend=method,
                    seconds_per_call=t, baseline_seconds=t_jnp)
+
+    # --- the huge-operand NTT/CRT tier (kernels/ntt_mul) ---
+    # The jnp Karatsuba composition is the dispatch fallback the NTT tier
+    # replaces; its XLA compile is ~80s at 8192 bits and grows with the
+    # recursion tree (minutes past 16K bits), so the head-to-head runs at
+    # 8192 bits only and the wider rows record the NTT trajectory --
+    # there IS no feasible jnp baseline to time up there, which is
+    # precisely the point of the tier.
+    ntt_batch = 16 if smoke else 32
+    if smoke:
+        ntt_sizes = (8192,)
+    elif full:
+        ntt_sizes = (8192, 16384, 65536)
+    else:
+        ntt_sizes = (8192, 16384)
+    for nbits in ntt_sizes:
+        a, b = _limbs(rng, nbits, ntt_batch)
+        t_jnp = None
+        if nbits == 8192:
+            fn = jax.jit(lambda x, y: M.mul_limbs32(x, y, method="karatsuba"))
+            t_jnp = time_fn(fn, a, b, iters=iters)
+            out.append(row(f"mul/{nbits}b/karatsuba", t_jnp / ntt_batch))
+            record(records, op="mul", bits=nbits, batch=ntt_batch,
+                   backend="karatsuba", seconds_per_call=t_jnp,
+                   baseline_seconds=t_jnp)
+        fn = jax.jit(lambda x, y: M.mul_limbs32(x, y, method="ntt"))
+        t = time_fn(fn, a, b, iters=iters)
+        tag = (f"speedup_vs_jnp={t_jnp / t:.2f}x" if t_jnp
+               else "ntt-only: jnp karatsuba compile infeasible here")
+        out.append(row(f"mul/{nbits}b/ntt", t / ntt_batch, tag))
+        record(records, op="mul", bits=nbits, batch=ntt_batch, backend="ntt",
+               seconds_per_call=t, baseline_seconds=t_jnp)
     return out
 
 

@@ -26,10 +26,18 @@ REGRESS_TOLERANCE (the CI perf gate).
 
 The committed smoke-key baselines are conservative FLOORS, not point
 estimates: interpret-mode speedup ratios swing 1.5-3x run-to-run on
-loaded CPU runners, so the gated values are set low enough that only a
-structural regression (the fused path no longer decisively beating the
-jnp composition) trips them.  The batch-512 rows record the measured
-trajectory at full precision.
+loaded CPU runners (measured repeatedly across PRs -- e.g. the 512-bit
+fused-modexp ratio has been observed anywhere from 0.72x to 1.79x in
+back-to-back runs of the same commit), so a floor set near a single
+measurement is a coin-flip gate.  Policy: commit floors at ~0.5x of a
+representative measured ratio, low enough that only a STRUCTURAL
+regression (the fused path no longer decisively beating the jnp
+composition) trips them, and rely on the batch-512 rows to record the
+measured trajectory at full precision.  To keep regressions diagnosable
+from CI logs alone, ``--check-baseline`` prints a ``# perf-gate:`` line
+for EVERY gated key showing the fresh measurement, the committed floor,
+and the margin between them -- a shrinking margin across PRs is the
+early warning; the hard failure only fires below the floor.
 """
 import argparse
 import inspect
@@ -58,6 +66,7 @@ def _baseline_path(suite: str, out_dir: str | None = None) -> str:
 
 def write_json(suite: str, records: list, out_dir: str) -> str:
     """Merge records into DIR/BENCH_<suite>.json (new keys win)."""
+    os.makedirs(out_dir, exist_ok=True)
     path = _baseline_path(suite, out_dir)
     merged = {}
     if os.path.exists(path):
@@ -79,19 +88,27 @@ def write_json(suite: str, records: list, out_dir: str) -> str:
 
 
 def check_baseline(suite: str, records: list,
-                   tolerance: float = REGRESS_TOLERANCE) -> list[str]:
+                   tolerance: float = REGRESS_TOLERANCE,
+                   margins: list[str] | None = None) -> list[str]:
     """Regression messages for Pallas backends vs the committed baseline.
 
     Compares the machine-independent speedup-vs-jnp ratio (both sides of
     the ratio are measured in the same run, so a slow CI machine cancels
     out); only keys present in both sets are judged.  The gate covers
     the multiply pipeline at kernel-sized operands (op "mul", >= 512
-    bits), the division kernel (op "div", >= 256 bits), and the fused
-    windowed modexp ladder (op "modexp", >= 512 bits -- both the fused
-    kernel and the bit-serial composition it must keep beating): smaller
-    micro rows and the add strategy sweep are recorded for the
-    trajectory but their per-call times are too small for
-    run-to-run-stable ratios.
+    bits, including the huge-operand "ntt" tier), the division kernel
+    (op "div", >= 256 bits), and the fused windowed modexp ladder (op
+    "modexp", >= 512 bits -- both the fused kernel and the bit-serial
+    composition it must keep beating): smaller micro rows and the add
+    strategy sweep are recorded for the trajectory but their per-call
+    times are too small for run-to-run-stable ratios.
+
+    ``margins``, when given, collects one human-readable line per GATED
+    key -- measured ratio, committed floor, and headroom -- so CI logs
+    show how close every key sits to its floor even when nothing fails
+    (the deflake contract: floors sit at ~0.5x of measured ratios, see
+    the module docstring; a margin trending toward 0 is the signal to
+    investigate before the hard gate fires).
     """
     path = _baseline_path(suite)
     if not os.path.exists(path):
@@ -106,13 +123,19 @@ def check_baseline(suite: str, records: list,
         if rec["op"] == "div":
             if rec["backend"] != "schoolbook":
                 continue
-        elif "pallas" not in rec["backend"] and "kernel" not in rec["backend"]:
+        elif "pallas" not in rec["backend"] and "kernel" not in rec["backend"] \
+                and rec["backend"] != "ntt":
             continue
         base = baseline.get(_key(rec))
         if not base or not base.get("speedup_vs_jnp") \
                 or not rec.get("speedup_vs_jnp"):
             continue
         floor = base["speedup_vs_jnp"] * (1.0 - tolerance)
+        if margins is not None:
+            margins.append(
+                f"{suite}:{'/'.join(map(str, _key(rec)))} measured "
+                f"{rec['speedup_vs_jnp']:.2f}x vs floor {floor:.2f}x "
+                f"(headroom {rec['speedup_vs_jnp'] / floor - 1.0:+.0%})")
         if rec["speedup_vs_jnp"] < floor:
             problems.append(
                 f"{suite}:{'/'.join(map(str, _key(rec)))} speedup "
@@ -169,7 +192,10 @@ def main() -> None:
         # check BEFORE writing: --json-out pointed at the baseline dir
         # must not overwrite the baseline the check compares against
         if records and args.check_baseline:
-            regressions.extend(check_baseline(name, records))
+            margins: list[str] = []
+            regressions.extend(check_baseline(name, records, margins=margins))
+            for line in margins:
+                print(f"# perf-gate: {line}", flush=True)
         if records and args.json_out:
             path = write_json(name, records, args.json_out)
             print(f"# wrote {path} ({len(records)} records)", flush=True)

@@ -22,10 +22,24 @@ class MulDispatchConfig:
     fused_kara_max_bits: int = 4096   # <= : fused Karatsuba ("pallas_kara")
     mxu_max_bits: int = 4096          # <= : int8 Toeplitz ("pallas_mxu")
     kara_threshold_digits: int = 32   # leaf width inside the fused kernel
+    # >= : fused NTT/CRT kernels ("ntt") -- the huge-operand tier.  Between
+    # fused_kara_max_bits and here the jnp Karatsuba composition still wins
+    # (the NTT's fixed per-launch transform work isn't yet amortized);
+    # from 8192 bits up the O(n log n) butterflies beat the composition
+    # AND its trace/compile cost, which grows with the recursion tree.
+    ntt_min_bits: int = 8192
+    # CRT prime-set size for the NTT tier.  2 primes (~2**56 modulus) are
+    # exact to ~2**24 digits -- far past the 64K-bit design point; 3
+    # (~2**86) stay selectable for validation and wider future radices.
+    ntt_primes: int = 2
     # Below this many independent operations a kernel launch cannot
     # amortize (the kernels tile the BATCH axis); small batches take the
     # jnp compositions instead: the quadratic VnC outer product while its
-    # working set stays small, jnp Karatsuba beyond.
+    # working set stays small.  Above the dot range the NTT kernel runs
+    # even at batch 1: unlike the quadratic-unroll kernels (and the jnp
+    # Karatsuba composition, whose XLA compile takes minutes past 4096
+    # bits), its trace is O(log n) stages, so a batch-1 launch still
+    # compiles in seconds and the O(n log n) work wins outright.
     kernel_min_batch: int = 8
     small_batch_dot_max_bits: int = 4096
 

@@ -352,7 +352,7 @@ def mul_karatsuba(a: jax.Array, b: jax.Array, threshold: int = 16,
 # ---------------------------------------------------------------------------
 
 MUL_METHODS = ("dot", "mxu", "schoolbook", "karatsuba",
-               "pallas", "pallas_mxu", "pallas_kara")
+               "pallas", "pallas_mxu", "pallas_kara", "ntt")
 
 
 def select_method(nbits: int, batch: int = 1,
@@ -365,7 +365,10 @@ def select_method(nbits: int, batch: int = 1,
       kernel ("pallas"),
     * 512..4096 bits: the fused Karatsuba kernel ("pallas_kara"),
     * beyond the fused kernel's overflow analysis: the jnp Karatsuba
-      composition ("karatsuba").
+      composition ("karatsuba"),
+    * huge operands (>= ``cfg.ntt_min_bits``): the fused NTT/CRT kernel
+      family ("ntt") -- O(n log n) butterflies, one launch per CRT prime
+      (kernels/ntt_mul).
 
     ``prefer_mxu`` selects the int8 Toeplitz kernel where its range
     allows (worth it when the MXU would otherwise sit idle).  The
@@ -376,9 +379,15 @@ def select_method(nbits: int, batch: int = 1,
     the carry machinery amortizes.  Below ``cfg.kernel_min_batch``
     independent operations a launch cannot pay for itself (and on CPU
     its interpret-mode compile dwarfs the work), so small batches take
-    the jnp compositions: VnC while the quadratic outer product stays
-    small, Karatsuba beyond.  The division subsystem's batch-1 paths
-    (base conversion, the pi workload) live in this regime.
+    the jnp compositions while the quadratic VnC outer product stays
+    small.  The NTT tier is the exception: above the small-batch dot
+    range it runs even at batch 1, because its trace is O(log n) stages
+    (a batch-1 launch compiles in seconds, where the jnp Karatsuba
+    composition's compile takes minutes past 4096 bits) and its
+    O(n log n) work beats the composition outright.  The division
+    subsystem's batch-1 paths (base conversion, the pi workload) live
+    in this regime -- their huge-width multiplies ride the NTT tier
+    automatically.
     """
     import os
 
@@ -392,7 +401,7 @@ def select_method(nbits: int, batch: int = 1,
         return env
     if batch < cfg.kernel_min_batch:
         return "dot" if nbits <= cfg.small_batch_dot_max_bits \
-            else "karatsuba"
+            else "ntt"
     if prefer_mxu and nbits <= cfg.mxu_max_bits:
         return "pallas_mxu"
     if nbits <= cfg.jnp_max_bits:
@@ -401,7 +410,9 @@ def select_method(nbits: int, batch: int = 1,
         return "pallas"
     if nbits <= cfg.fused_kara_max_bits:
         return "pallas_kara"
-    return "karatsuba"
+    if nbits < cfg.ntt_min_bits:
+        return "karatsuba"
+    return "ntt"
 
 
 def _flatten_leading(x: jax.Array):
@@ -417,7 +428,7 @@ def mul_limbs32(a_limbs: jax.Array, b_limbs: jax.Array,
         for d in a_limbs.shape[:-1]:
             batch *= int(d)
         method = select_method(32 * m, batch=batch)
-    if method in ("pallas", "pallas_mxu", "pallas_kara"):
+    if method in ("pallas", "pallas_mxu", "pallas_kara", "ntt"):
         # kernel entry points are 2-D (batch, m); imported lazily because
         # the ops modules import core.mul at module level (cycle) -- core
         # depends statically only on the pure-jnp kernels/common helpers
@@ -429,6 +440,9 @@ def mul_limbs32(a_limbs: jax.Array, b_limbs: jax.Array,
         elif method == "pallas_mxu":
             from repro.kernels.mxu_mul import ops as _k
             out = _k.mxu_mul_limbs32(a2, b2)
+        elif method == "ntt":
+            from repro.kernels.ntt_mul import ops as _k
+            out = _k.ntt_mul_limbs32(a2, b2)
         else:
             from repro.kernels.kara_mul import ops as _k
             out = _k.kara_mul_limbs32(a2, b2)
@@ -447,7 +461,10 @@ def mul_limbs32(a_limbs: jax.Array, b_limbs: jax.Array,
     elif method == "karatsuba":
         p = mul_karatsuba(a_d, b_d)
     else:
-        raise ValueError(f"unknown method {method!r}")
+        raise ValueError(
+            f"unknown multiply method {method!r}; choose from "
+            f"{('auto',) + MUL_METHODS} (REPRO_MUL_BACKEND accepts the "
+            f"same names, minus 'auto')")
     return join_digits(p, DIGIT_BITS, 2 * m)
 
 

@@ -1,0 +1,44 @@
+"""Oracles for the fused NTT multiply kernel.
+
+``ntt_mul_digits_ref`` is the jnp Karatsuba composition (itself
+oracle-tested against Python ints in tests/test_mul.py); tests/
+test_ntt_mul.py additionally checks digits against Python-int ground
+truth directly so a kernel bug and a core/mul.py bug cannot cancel.
+``ntt_fwd_ref`` is an O(N**2) Python-int DFT used to pin down the
+transform itself (twiddle tables, stage order, bit-reversed layout)
+independently of the inverse that would undo a systematic error.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.mul import mul_karatsuba, mul_limbs32
+from repro.kernels.ntt_mul.kernel import GENERATOR
+
+
+def ntt_mul_digits_ref(a_digits, b_digits):
+    return mul_karatsuba(a_digits, b_digits)
+
+
+def ntt_mul_limbs32_ref(a_limbs, b_limbs):
+    return mul_limbs32(a_limbs, b_limbs, method="karatsuba")
+
+
+def _bit_reverse(i: int, bits: int) -> int:
+    out = 0
+    for _ in range(bits):
+        out = (out << 1) | (i & 1)
+        i >>= 1
+    return out
+
+
+def ntt_fwd_ref(x, p: int) -> np.ndarray:
+    """Length-N forward NTT mod p by direct evaluation (Python ints),
+    returned in the BIT-REVERSED order the DIF kernel produces."""
+    n = len(x)
+    w = pow(GENERATOR, (p - 1) // n, p)
+    nat = [sum(int(x[j]) * pow(w, i * j, p) for j in range(n)) % p
+           for i in range(n)]
+    bits = n.bit_length() - 1
+    return np.array([nat[_bit_reverse(i, bits)] for i in range(n)],
+                    np.uint32)

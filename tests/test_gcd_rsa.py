@@ -1,0 +1,163 @@
+"""Direct oracle coverage for core/gcd.py and core/rsa.py (first time
+either has its own test module; previously they were exercised only
+through examples and benchmarks).
+
+gcd: batched binary GCD lanes vs math.gcd, plus the structural edge
+cases every branch of the masked select tree must handle (coprime pairs,
+equal operands, zero lanes, powers of two with a shared 2-adic part).
+
+rsa: host keygen + batched sign/verify roundtrip, CRT decrypt against
+the plain full-ladder decrypt, and tampered-signature rejection, at
+256 and 512 bits.  Batches stay below the fused-kernel threshold so the
+jnp windowed ladder runs (the fused kernel has its own oracle suite in
+test_modexp_window.py).
+"""
+import math
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import gcd as G
+from repro.core import limbs as L
+from repro.core import rsa as R
+
+RNG = np.random.default_rng(23)
+DIGIT_BITS = 16
+
+
+def _digits(ints, nbits):
+    nd = nbits // DIGIT_BITS
+    return jnp.asarray(np.stack(
+        [L.int_to_limbs(v, nd, DIGIT_BITS) for v in ints]))
+
+
+def _check_gcd(us, vs, nbits):
+    got = np.asarray(G.gcd(_digits(us, nbits), _digits(vs, nbits)))
+    for i, (u, v) in enumerate(zip(us, vs)):
+        assert L.limbs_to_int(got[i], DIGIT_BITS) == math.gcd(u, v), (i, u, v)
+
+
+# ---------------------------------------------------------------------------
+# gcd vs math.gcd
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nbits", [256, 512])
+def test_gcd_random_lanes(nbits):
+    us = L.random_bigints(RNG, 12, nbits)
+    vs = L.random_bigints(RNG, 12, nbits)
+    _check_gcd(us, vs, nbits)
+
+
+@pytest.mark.parametrize("nbits", [256, 512])
+def test_gcd_shared_factor(nbits):
+    """Lanes with a large constructed common divisor (the interesting
+    case: the result is wide, not a small integer)."""
+    g = L.random_bigints(RNG, 6, nbits // 2)
+    a = L.random_bigints(RNG, 6, nbits // 2 - 1)
+    b = L.random_bigints(RNG, 6, nbits // 2 - 1)
+    us = [x * y for x, y in zip(g, a)]
+    vs = [x * y for x, y in zip(g, b)]
+    _check_gcd(us, vs, nbits)
+
+
+def test_gcd_edge_cases():
+    nbits = 256
+    full = (1 << nbits) - 1
+    cases = [
+        (0, 0),                      # gcd(0, 0) = 0
+        (0, 12345),                  # gcd(0, v) = v
+        (67890, 0),                  # gcd(u, 0) = u
+        (full, full),                # equal operands
+        (1, full),                   # coprime by construction
+        (3, 5),                      # tiny coprime
+        (1 << 200, 1 << 120),        # powers of two: min 2-adic part
+        (12 << 100, 18 << 100),      # shared odd and 2-adic factors
+    ]
+    _check_gcd([c[0] for c in cases], [c[1] for c in cases], nbits)
+
+
+def test_gcd_batch_of_one_and_leading_dims():
+    nbits = 256
+    us = L.random_bigints(RNG, 4, nbits)
+    vs = L.random_bigints(RNG, 4, nbits)
+    one = np.asarray(G.gcd(_digits(us[:1], nbits), _digits(vs[:1], nbits)))
+    assert L.limbs_to_int(one[0], DIGIT_BITS) == math.gcd(us[0], vs[0])
+    nd = nbits // DIGIT_BITS
+    got = np.asarray(G.gcd(_digits(us, nbits).reshape(2, 2, nd),
+                           _digits(vs, nbits).reshape(2, 2, nd)))
+    flat = got.reshape(4, nd)
+    for i in range(4):
+        assert L.limbs_to_int(flat[i], DIGIT_BITS) == math.gcd(us[i], vs[i])
+
+
+# ---------------------------------------------------------------------------
+# rsa: sign/verify roundtrip, CRT decrypt, tamper rejection.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module",
+                params=[256, pytest.param(512, marks=pytest.mark.slow)])
+def key(request):
+    """256-bit keys run in the PR-fast subset; the 512-bit grid rides
+    the full suite (ladder tracing dominates, ~2 min for the module)."""
+    return R.generate_key(bits=request.param, seed=7)
+
+
+def _messages(key, count=4):
+    msgs = [R.digest_int(f"msg-{i}".encode(), key.bits)
+            for i in range(count)]
+    return msgs, R.messages_to_digits(msgs, key)
+
+
+def test_sign_verify_roundtrip(key):
+    msgs, m_dig = _messages(key)
+    sig = R.sign(m_dig, key)
+    back = np.asarray(R.verify(sig, key))
+    for i, msg in enumerate(msgs):
+        assert L.limbs_to_int(back[i], DIGIT_BITS) == msg % key.n, i
+
+
+def test_sign_matches_python_pow(key):
+    msgs, m_dig = _messages(key, count=2)
+    sig = np.asarray(R.sign(m_dig, key))
+    for i, msg in enumerate(msgs):
+        assert L.limbs_to_int(sig[i], DIGIT_BITS) == pow(msg, key.d, key.n), i
+
+
+def test_decrypt_crt_matches_plain(key):
+    """CRT decrypt (two half-size ladders + Garner) == full ladder == the
+    Python-int oracle; both compute c^d mod n."""
+    msgs, c_dig = _messages(key)
+    plain = np.asarray(R.sign(c_dig, key))            # c^d mod n, full ladder
+    crt = np.asarray(R.decrypt_crt(c_dig, key))
+    for i, msg in enumerate(msgs):
+        want = pow(msg, key.d, key.n)
+        assert L.limbs_to_int(crt[i], DIGIT_BITS) == want, i
+        assert L.limbs_to_int(plain[i], DIGIT_BITS) == want, i
+
+
+def test_decrypt_crt_requires_factors(key):
+    pub = R.RSAKey(n=key.n, e=key.e, d=key.d, bits=key.bits)
+    _, c_dig = _messages(key, count=1)
+    with pytest.raises(ValueError, match="p, q"):
+        R.decrypt_crt(c_dig, pub)
+
+
+def test_tampered_signature_rejected(key):
+    msgs, m_dig = _messages(key)
+    sig = np.asarray(R.sign(m_dig, key)).copy()
+    sig[:, 0] ^= 1                                    # flip one bit per lane
+    back = np.asarray(R.verify(jnp.asarray(sig), key))
+    for i, msg in enumerate(msgs):
+        assert L.limbs_to_int(back[i], DIGIT_BITS) != msg % key.n, i
+
+
+def test_verify_rejects_cross_lane_swap(key):
+    """A valid signature for one message must not verify another."""
+    msgs, m_dig = _messages(key)
+    sig = np.asarray(R.sign(m_dig, key))
+    swapped = jnp.asarray(np.roll(sig, 1, axis=0))
+    back = np.asarray(R.verify(swapped, key))
+    for i, msg in enumerate(msgs):
+        assert L.limbs_to_int(back[i], DIGIT_BITS) != msg % key.n, i

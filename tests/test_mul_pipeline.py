@@ -118,21 +118,27 @@ def test_select_method_branches():
     assert M.select_method(512, batch=B) == "pallas"
     assert M.select_method(1024, batch=B) == "pallas_kara"
     assert M.select_method(4096, batch=B) == "pallas_kara"
-    assert M.select_method(8192, batch=B) == "karatsuba"
+    assert M.select_method(6144, batch=B) == "karatsuba"
+    assert M.select_method(8192, batch=B) == "ntt"
     assert M.select_method(1024, batch=B, prefer_mxu=True) == "pallas_mxu"
-    assert M.select_method(8192, batch=B, prefer_mxu=True) == "karatsuba"
+    assert M.select_method(6144, batch=B, prefer_mxu=True) == "karatsuba"
+    assert M.select_method(8192, batch=B, prefer_mxu=True) == "ntt"
 
 
 def test_select_method_small_batch_avoids_kernels():
     """Launches only amortize over the batch axis: tiny batches take the
-    jnp compositions (and dodge interpret-mode compile cost on CPU)."""
+    jnp compositions (and dodge interpret-mode compile cost on CPU).
+    The NTT kernel is the one exception -- its O(log n) trace compiles
+    in seconds at any width, so huge small-batch operands take it
+    instead of the jnp Karatsuba composition (whose compile explodes
+    past 4096 bits; see test_ntt_mul.py for the tier's own coverage)."""
     from repro.configs.dot_bignum import MUL_DISPATCH as cfg
     small = cfg.kernel_min_batch - 1
     assert M.select_method(1024, batch=small) == "dot"
     assert M.select_method(cfg.small_batch_dot_max_bits,
                            batch=small) == "dot"
     assert M.select_method(cfg.small_batch_dot_max_bits + 32,
-                           batch=small) == "karatsuba"
+                           batch=small) == "ntt"
     assert M.select_method(1024, batch=cfg.kernel_min_batch) == "pallas_kara"
 
 

@@ -1,9 +1,20 @@
 """Hypothesis property-based tests on the system's core invariants.
 
+Two layers: per-op oracles against Python ints (the original suite) and
+the CROSS-OP algebraic consistency suite -- ring identities whose two
+sides are deliberately computed through DIFFERENT backends (dot vs
+schoolbook vs karatsuba vs ntt multiplies, Montgomery vs Barrett
+modexp, mul vs divmod), so the paths are cross-checked against each
+other rather than only against the shared python-int oracle.  A bug
+that two backends share with the conversion glue would slip past
+per-op oracles; it cannot slip past an identity whose sides never meet
+until the final compare.
+
 hypothesis is a dev-only dependency (``pip install -e .[dev]``); a bare
 environment skips this module instead of erroring at collection.
 """
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
@@ -11,7 +22,9 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 import repro.core.add as A
+import repro.core.modular as MOD
 import repro.core.mul as M
+from repro.core import div as DV
 from repro.core import exact_accum as EA
 from repro.core import limbs as L
 
@@ -96,3 +109,109 @@ def test_split_join_roundtrip(args):
         d = M.split_digits(jnp.asarray(a), bits)
         back = M.join_digits(d, bits, m)
         np.testing.assert_array_equal(np.asarray(back), a)
+
+
+# ===========================================================================
+# Cross-op algebraic consistency suite: each identity's sides run through
+# DIFFERENT backends, so the paths check each other, not just python-int.
+# ===========================================================================
+
+# the jnp compositions plus the NTT kernel family; every call below goes
+# through a jitted entry point (M.mul_jit / a jitted divmod) and the
+# width draws are sampled from a FIXED handful so shapes repeat across
+# hypothesis examples and the jit cache pays the trace cost exactly once
+MIXED_MUL_METHODS = ("dot", "schoolbook", "karatsuba", "ntt")
+CROSS_WIDTHS = (2, 3, 6)                       # 64/96/192-bit operands
+
+SET_CROSS = settings(max_examples=25, deadline=None)
+
+_divmod_jit = DV.divmod_jit                    # jitted divmod front door
+
+
+@given(st.sampled_from(CROSS_WIDTHS).flatmap(
+    lambda m: st.tuples(st.just(m), bigint(32 * m), bigint(32 * m))))
+@SET_CROSS
+def test_cross_mul_backends_agree_and_divmod_inverts(args):
+    """All multiply backends produce identical products, and
+    divmod(a*b, b) == (a, 0) with the division subsystem (the divmod
+    rides the Newton-reciprocal path, itself built on pipeline
+    multiplies -- mul and div cross-check each other)."""
+    m, x, y = args
+    y |= 1                                     # nonzero divisor
+    a = L.ints_to_batch([x], m)
+    b = L.ints_to_batch([y], m)
+    prods = {meth: np.asarray(M.mul_jit(a, b, meth))
+             for meth in MIXED_MUL_METHODS}
+    ref = prods[MIXED_MUL_METHODS[0]]
+    for meth, p in prods.items():
+        np.testing.assert_array_equal(p, ref, err_msg=meth)
+    q, r = _divmod_jit(jnp.asarray(prods["ntt"]), jnp.asarray(b))
+    assert L.limbs_to_int(np.asarray(q)[0]) == x
+    assert L.limbs_to_int(np.asarray(r)[0]) == 0
+
+
+@given(st.integers(1, 8).flatmap(
+    lambda m: st.tuples(st.just(m), bigint(32 * m), bigint(32 * m))))
+@SET_CROSS
+def test_cross_add_sub_roundtrip(args):
+    """(x + y) - y == x, and the subtract's borrow mirrors the add's
+    carry (the DoT add and sub lanes invert each other exactly)."""
+    m, x, y = args
+    a = L.ints_to_batch([x], m)
+    b = L.ints_to_batch([y], m)
+    s, c = A.dot_add(a, b)
+    d, bo = A.dot_sub(s, b)
+    np.testing.assert_array_equal(np.asarray(d), a)
+    assert int(np.asarray(bo)[0]) == int(np.asarray(c)[0])
+
+
+@given(st.sampled_from((2, 5)).flatmap(
+    lambda m: st.tuples(st.just(m), bigint(32 * m), bigint(32 * m),
+                        bigint(32 * m))))
+@SET_CROSS
+def test_cross_distributivity_mixed_backends(args):
+    """a*(b+c) == a*b + a*c with the left side through the NTT kernel
+    and the right side through the jnp VnC composition, recombined
+    under ONE carry-resolving dot_add."""
+    m, x, y, z = args
+    w = m + 1                                  # headroom for y + z
+    a_w = L.ints_to_batch([x], w)
+    s_w = L.ints_to_batch([y + z], w)
+    lhs = np.asarray(M.mul_jit(a_w, s_w, "ntt"))
+    p1 = M.mul_jit(L.ints_to_batch([x], m), L.ints_to_batch([y], m), "dot")
+    p2 = M.mul_jit(L.ints_to_batch([x], m), L.ints_to_batch([z], m), "dot")
+    pad = [(0, 0), (0, 2 * w - 2 * m)]
+    rhs, carry = A.dot_add(jnp.pad(p1, pad), jnp.pad(p2, pad))
+    assert int(np.asarray(carry)[0]) == 0      # 2w limbs always suffice
+    np.testing.assert_array_equal(lhs, np.asarray(rhs))
+
+
+# Fermat's little theorem: a^(p-1) == 1 mod p, Montgomery ladder vs
+# Barrett ladder -- the two modexp reductions check each other AND the
+# known answer.  Fixed primes keep every shape jit-cached.
+FERMAT_PRIMES = (
+    0xD59741E7F4DE438F5D411B0DF9E324DF,                    # 128-bit
+    0xB7CFD8913CE3808E345158DB971503BD126D15699C9E8753,    # 192-bit
+)
+_FERMAT_FNS = {}
+
+
+def _fermat_fn(p, backend):
+    if (p, backend) not in _FERMAT_FNS:
+        ctx = MOD.mont_setup(p)
+        bits = jnp.asarray(MOD.exp_bits_msb(p - 1, p.bit_length()))
+        _FERMAT_FNS[(p, backend)] = jax.jit(
+            lambda xd: MOD.mod_exp(xd, bits, ctx, backend=backend))
+    return _FERMAT_FNS[(p, backend)]
+
+
+@given(st.sampled_from(FERMAT_PRIMES), st.integers(2, (1 << 128) - 1))
+@settings(max_examples=15, deadline=None)
+def test_cross_fermat_little_theorem(p, a):
+    a = a % p or 2                             # nonzero residue
+    m_digits = MOD.mont_setup(p).m
+    x = jnp.asarray(L.ints_to_batch([a], m_digits, 16))
+    got = {be: np.asarray(_fermat_fn(p, be)(x))
+           for be in ("jnp", "barrett")}
+    for be, out in got.items():
+        assert L.limbs_to_int(out[0], 16) == 1, (be, hex(p), hex(a))
