@@ -1,0 +1,129 @@
+"""Continuous-batching serving benchmark (beyond-paper): Poisson
+request trace through serve/bignum_engine.BignumEngine vs the
+one-request-at-a-time NaiveServer.
+
+The trace mixes several moduli of DIFFERENT natural widths (1024 /
+1008 / 992 / 976 bits by default -- think distinct DH groups / RSA
+keys in one deployment).  Three replays of the same trace:
+
+  * ``engine``         shape-bucketed, continuously batched, pre-warmed
+                       on its finite modulus set (warming is the
+                       engine's startup contract; its jit cache key
+                       makes the compile set finite).  The benchmark
+                       asserts ZERO retraces across the replay.
+  * ``naive_cold``     one-at-a-time at natural shapes: every new
+                       width/modulus retraces IN-TRACE -- the cost a
+                       shape-following server actually pays on this
+                       request mix (gated record: op=serve,
+                       backend=engine, speedup = cold/engine).
+  * ``naive_warm``     the same server replayed again, now fully
+                       compiled: isolates the pure batching win
+                       (recorded as backend=engine_vs_warm, ungated --
+                       on a single CPU core batch-8 modexp gains are
+                       modest; lane-parallel hardware is where the
+                       fused ladder's batch regime pays).
+
+Both sides run the jnp backend so the ratio measures serving structure
+(batching + program caching), not backend choice: on this CPU the
+Pallas ladder executes in interpret mode and would handicap whichever
+side used it; on real TPU the engine's auto-dispatch hands kernel-sized
+batches to the fused ladder.
+
+The virtual-clock replay model (see bignum_engine.replay_trace) uses
+real measured service wall-times on a Poisson arrival clock, so ops/s
+and latency percentiles are reproducible run to run up to machine
+speed; the gated quantity is a SAME-RUN ratio, so a slow CI machine
+cancels out.  ``--smoke`` shrinks to 256-bit moduli and a short trace.
+
+The committed benchmarks/BENCH_serve.json "engine" rows are
+conservative FLOORS per the run.py deflake policy, far below measured
+(observed ~644x at 256 bits / ~40x at 1024 bits, dominated by the
+naive server's in-trace compiles; committed 40x / 8x): the gate should
+only trip if the engine structurally loses its no-retrace or batching
+advantage, not on compile-time noise.
+"""
+from __future__ import annotations
+
+import argparse
+
+from benchmarks.util import record, row
+from repro.launch.serve_bignum import build_ops
+from repro.serve.bignum_engine import (
+    BignumEngine, NaiveServer, poisson_trace, replay_naive, replay_trace)
+from repro.configs.dot_bignum import ServeConfig
+
+BACKEND = "jnp"          # held equal on both sides; see module docstring
+
+
+def _replay_point(out, records, *, bits, groups, n, rate, slots, seed):
+    templates, warm = build_ops("mod_exp", bits, groups, seed)
+
+    def trace():
+        return poisson_trace(templates, n, rate, seed=seed)
+
+    cfg = ServeConfig(slots=slots)
+    engine = BignumEngine(cfg, backend=BACKEND)
+    for w in warm:
+        engine.warm(**w)
+    warm_traces = engine.stats.traces
+    eng = replay_trace(engine, trace())
+    retraces = engine.stats.traces - warm_traces
+    assert retraces == 0, (
+        f"engine retraced {retraces}x across the mixed trace "
+        f"(stats: {engine.stats})")
+
+    naive = NaiveServer(backend=BACKEND)
+    cold = replay_naive(naive, trace())
+    warmed = replay_naive(naive, trace())   # same server, now compiled
+
+    st = engine.stats
+    out.append(row(
+        f"serve/poisson{bits}/engine", eng.makespan_s / n,
+        f"ops_s={eng.ops_per_s:.1f} p50_ms={eng.p50_ms:.1f} "
+        f"p99_ms={eng.p99_ms:.1f} batches={st.batches} "
+        f"full={st.flush_full} deadline={st.flush_deadline} "
+        f"padded={st.padded_lanes} retraces={retraces}"))
+    out.append(row(
+        f"serve/poisson{bits}/naive_cold", cold.makespan_s / n,
+        f"ops_s={cold.ops_per_s:.1f} p50_ms={cold.p50_ms:.1f} "
+        f"p99_ms={cold.p99_ms:.1f} compiles={naive.stats.traces}"))
+    out.append(row(
+        f"serve/poisson{bits}/naive_warm", warmed.makespan_s / n,
+        f"ops_s={warmed.ops_per_s:.1f} p50_ms={warmed.p50_ms:.1f} "
+        f"p99_ms={warmed.p99_ms:.1f} "
+        f"engine_speedup={warmed.makespan_s / eng.makespan_s:.2f}x"))
+
+    record(records, op="serve", bits=bits, batch=n, backend="engine",
+           seconds_per_call=eng.makespan_s,
+           baseline_seconds=cold.makespan_s)
+    record(records, op="serve", bits=bits, batch=n,
+           backend="engine_vs_warm", seconds_per_call=eng.makespan_s,
+           baseline_seconds=warmed.makespan_s)
+    record(records, op="serve", bits=bits, batch=n, backend="naive",
+           seconds_per_call=cold.makespan_s, baseline_seconds=None)
+
+
+def run(full: bool = False, smoke: bool = False,
+        records: list | None = None):
+    out = []
+    if smoke:
+        # rate overloads both servers (warm capacity ~2.5k ops/s at 256
+        # bits) so throughput measures capacity, not the arrival clock
+        points = [dict(bits=256, groups=3, n=24, rate=10000.0, slots=8)]
+    elif full:
+        points = [dict(bits=512, groups=4, n=48, rate=1000.0, slots=8),
+                  dict(bits=1024, groups=4, n=64, rate=1000.0, slots=8)]
+    else:
+        points = [dict(bits=1024, groups=4, n=64, rate=1000.0, slots=8)]
+    for p in points:
+        _replay_point(out, records, seed=p["bits"], **p)
+    return out
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    for r in run(full=args.full, smoke=args.smoke):
+        print(r)

@@ -97,9 +97,11 @@ def check_baseline(suite: str, records: list,
     out); only keys present in both sets are judged.  The gate covers
     the multiply pipeline at kernel-sized operands (op "mul", >= 512
     bits, including the huge-operand "ntt" tier), the division kernel
-    (op "div", >= 256 bits), and the fused windowed modexp ladder (op
+    (op "div", >= 256 bits), the fused windowed modexp ladder (op
     "modexp", >= 512 bits -- both the fused kernel and the bit-serial
-    composition it must keep beating): smaller micro rows and the add
+    composition it must keep beating), and the serving engine's
+    batched-vs-naive throughput ratio (op "serve", backend "engine",
+    see bench_serve): smaller micro rows and the add
     strategy sweep are recorded for the trajectory but their per-call
     times are too small for run-to-run-stable ratios.
 
@@ -116,12 +118,17 @@ def check_baseline(suite: str, records: list,
     with open(path) as f:
         baseline = {_key(r): r for r in json.load(f)["records"]}
     problems = []
-    min_bits = {"mul": 512, "div": 256, "modexp": 512}
+    min_bits = {"mul": 512, "div": 256, "modexp": 512, "serve": 256}
     for rec in records:
         if rec["op"] not in min_bits or rec["bits"] < min_bits[rec["op"]]:
             continue
         if rec["op"] == "div":
             if rec["backend"] != "schoolbook":
+                continue
+        elif rec["op"] == "serve":
+            # gate the headline engine-vs-cold-naive throughput ratio;
+            # engine_vs_warm and naive rows are trajectory-only
+            if rec["backend"] != "engine":
                 continue
         elif "pallas" not in rec["backend"] and "kernel" not in rec["backend"] \
                 and rec["backend"] != "ntt":
@@ -159,12 +166,12 @@ def main() -> None:
 
     from benchmarks import (bench_add, bench_breakdown, bench_crypto,
                             bench_div, bench_exact_accum, bench_gmp,
-                            bench_mul, bench_roofline)
+                            bench_mul, bench_roofline, bench_serve)
     suites = {
         "add": bench_add, "mul": bench_mul, "div": bench_div,
         "breakdown": bench_breakdown, "gmp": bench_gmp,
         "crypto": bench_crypto, "exact_accum": bench_exact_accum,
-        "roofline": bench_roofline,
+        "roofline": bench_roofline, "serve": bench_serve,
     }
     pick = args.only.split(",") if args.only else list(suites)
     print("name,us_per_call,derived")

@@ -1,0 +1,33 @@
+"""SIMD large-number arithmetic on TPU (jax / Pallas).
+
+The public surface is the ``repro.api`` facade -- ``mul`` / ``divmod``
+/ ``mod_exp`` / ``rsa_sign`` / ``rsa_verify`` / ``rsa_decrypt`` /
+``to_decimal`` on uint32 limb arrays, plus ``configure`` for dispatch
+overrides.  Its names are re-exported here lazily (PEP 562) so that
+``import repro`` (and imports of the pure-host submodules like
+``repro.configs``) stay light: jax loads only when an api name is
+first touched.
+"""
+from __future__ import annotations
+
+_API_NAMES = (
+    "mul", "divmod", "mod_exp", "rsa_sign", "rsa_verify", "rsa_decrypt",
+    "to_decimal", "configure", "to_limbs", "from_limbs", "mod_setup",
+    "exp_bits_msb", "generate_key", "digest_int", "RSAKey",
+)
+
+__all__ = list(_API_NAMES) + ["api"]
+
+
+def __getattr__(name: str):
+    if name == "api" or name in _API_NAMES:
+        # importlib, NOT ``from repro import api``: the fromlist probe
+        # re-enters this __getattr__ before the submodule binds.
+        import importlib
+        _api = importlib.import_module("repro.api")
+        return _api if name == "api" else getattr(_api, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,253 @@
+"""Public bignum facade: the ONE front door for the paper's arithmetic.
+
+Every operation here takes and returns **32-bit limb arrays** (uint32,
+little-endian, limb axis last, leading axes are batch lanes -- the
+GMP-facing radix of ``core/limbs.py``) and follows one kwarg
+convention:
+
+  * ``method=``  picks a multiply/divide pipeline implementation
+    ("auto" dispatches by size and batch; see core/mul.select_method,
+    core/div.select_div_method),
+  * ``backend=`` picks a modular-arithmetic device backend (None
+    auto-dispatches; see core/modular.select_modexp_backend).
+
+This replaces the per-module scatter of entry points (mul_limbs32 /
+divmod_limbs32 / mod_exp-on-digit-arrays / rsa.sign...) for callers
+that just want arithmetic: the serving engine
+(serve/bignum_engine.py), the examples, and downstream users all go
+through here.  The digit-radix internals stay importable for kernels
+and tests.
+
+Configuration
+-------------
+``configure(...)`` is the supported way to override dispatch:
+
+    repro.api.configure(mul_method="ntt")          # process-wide
+    with repro.api.configure(modexp_backend="jnp"):  # scoped
+        ...
+
+The legacy ``REPRO_MUL_BACKEND`` / ``REPRO_DIV_BACKEND`` /
+``REPRO_MODEXP_BACKEND`` / ``REPRO_AUTOTUNE`` environment variables
+keep working as deprecated aliases (one DeprecationWarning per process
+each) at lower precedence; see repro/config.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import config as _config
+from repro.core import div as _div
+from repro.core import limbs as _L
+from repro.core import modular as _M
+from repro.core import mul as _mul
+from repro.core import rsa as _rsa
+
+U32 = jnp.uint32
+DIGIT_BITS = 16
+
+# re-exported names that already have the right shape/contract
+mod_setup = _M.mod_setup
+exp_bits_msb = _M.exp_bits_msb
+generate_key = _rsa.generate_key
+digest_int = _rsa.digest_int
+RSAKey = _rsa.RSAKey
+
+__all__ = [
+    "mul", "divmod", "mod_exp", "rsa_sign", "rsa_verify", "rsa_decrypt",
+    "to_decimal", "configure", "to_limbs", "from_limbs", "mod_setup",
+    "exp_bits_msb", "generate_key", "digest_int", "RSAKey",
+]
+
+
+# ---------------------------------------------------------------------------
+# host-side conversions
+# ---------------------------------------------------------------------------
+
+def to_limbs(values, nbits: int) -> np.ndarray:
+    """Python int(s) -> uint32 limb array sized for ``nbits``.
+
+    A single int gives (m,); a sequence gives (len, m) with
+    m = ceil(nbits / 32).  Values must be >= 0 and < 2**nbits."""
+    m = -(-nbits // 32)
+    if isinstance(values, int):
+        return _L.int_to_limbs(values, m, 32)
+    return _L.ints_to_batch(list(values), m, 32)
+
+
+def from_limbs(arr) -> "int | list[int]":
+    """uint32 limb array -> python int ((m,)) or list of ints ((..., m),
+    flattened over the leading axes in C order)."""
+    a = np.asarray(arr, np.uint32)
+    if a.ndim == 1:
+        return _L.limbs_to_int(a, 32)
+    return _L.batch_to_ints(a.reshape(-1, a.shape[-1]), 32)
+
+
+def _digits_from_limbs(x, m_digits: int) -> jax.Array:
+    """(..., ma) 32-bit limbs -> (..., m_digits) 16-bit digits (pad or
+    truncate; truncated digits must be zero -- values < the modulus)."""
+    d = _mul.split_digits(jnp.asarray(x, U32), DIGIT_BITS)
+    n = d.shape[-1]
+    if n < m_digits:
+        pad = [(0, 0)] * (d.ndim - 1) + [(0, m_digits - n)]
+        return jnp.pad(d, pad)
+    return d[..., :m_digits]
+
+
+def _limbs_from_digits(d, ma: int) -> jax.Array:
+    return _mul.join_digits(d, DIGIT_BITS, ma)
+
+
+def _limb_width(ctx) -> int:
+    return -(-(ctx.m * DIGIT_BITS) // 32)
+
+
+# ---------------------------------------------------------------------------
+# arithmetic front doors
+# ---------------------------------------------------------------------------
+
+def mul(a, b, *, method: str = "auto") -> jax.Array:
+    """Full product: (..., m) x (..., m) uint32 limbs -> (..., 2m).
+
+    ``method``: "auto" (size/batch dispatch) or one of
+    core/mul.MUL_METHODS."""
+    return _mul.mul_limbs32(a, b, method=method)
+
+
+def divmod(a, b, *, method: str = "auto"):  # noqa: A001 - facade name
+    """Exact floor (quotient, remainder): (..., ma) // (..., mb) uint32
+    limbs -> ((..., ma), (..., mb)).  ``method``: "auto" or one of
+    core/div.DIV_METHODS."""
+    return _div.divmod_limbs32(a, b, method=method)
+
+
+def to_decimal(x, n_dec: int) -> jax.Array:
+    """(..., m) uint32 limbs -> (..., n_dec) base-10 digits, most
+    significant first (on-device divide-and-conquer base conversion)."""
+    return _div.to_decimal_limbs32(x, n_dec)
+
+
+def mod_exp(base, exponent, modulus, *, backend: str | None = None,
+            window: int | None = None, nbits: int | None = None
+            ) -> jax.Array:
+    """base ** exponent mod modulus on (..., m) uint32 limb arrays.
+
+    ``modulus``: python int, or a prebuilt context from ``mod_setup``
+    (build once per modulus when serving -- setup is host-side work).
+    ``exponent``: python int (converted host-side), or a (..., nbits)
+    MSB-first bit array for per-lane exponents.  ``base`` lanes must be
+    < modulus.  ``backend=None`` auto-dispatches (fused Pallas ladder
+    for kernel-sized batches); ``nbits`` pads the modulus width (shape
+    bucketing -- requests of different widths share one trace)."""
+    ctx = _M.mod_setup(modulus, nbits) if isinstance(modulus, int) \
+        else modulus
+    eb = _M.exp_bits_msb(exponent) if isinstance(exponent, int) \
+        else exponent
+    d = _digits_from_limbs(base, ctx.m)
+    out = _M.mod_exp(d, jnp.asarray(eb), ctx, backend=backend,
+                     window=window)
+    return _limbs_from_digits(out, _limb_width(ctx))
+
+
+# ---------------------------------------------------------------------------
+# RSA front doors
+# ---------------------------------------------------------------------------
+
+def rsa_sign(msg, key: "_rsa.RSAKey", *, backend: str | None = None
+             ) -> jax.Array:
+    """s = m ** d mod n on (..., ma) uint32 limbs (ma = ceil(bits/32))."""
+    ctx = key.ctx
+    d = _digits_from_limbs(msg, ctx.m)
+    return _limbs_from_digits(_rsa.sign(d, key, backend=backend),
+                              _limb_width(ctx))
+
+
+def rsa_verify(sig, key: "_rsa.RSAKey", *, backend: str | None = None
+               ) -> jax.Array:
+    """m = s ** e mod n on (..., ma) uint32 limbs."""
+    ctx = key.ctx
+    d = _digits_from_limbs(sig, ctx.m)
+    return _limbs_from_digits(_rsa.verify(d, key, backend=backend),
+                              _limb_width(ctx))
+
+
+def rsa_decrypt(cipher, key: "_rsa.RSAKey", *, backend: str | None = None,
+                crt: bool = True) -> jax.Array:
+    """m = c ** d mod n on (..., ma) uint32 limbs.  ``crt=True`` (needs
+    a key with known p, q) runs the two half-size CRT modexps; False
+    falls back to the full-width ladder (== rsa_sign)."""
+    ctx = key.ctx
+    d = _digits_from_limbs(cipher, ctx.m)
+    if crt:
+        out = _rsa.decrypt_crt(d, key, backend=backend)[..., :ctx.m]
+    else:
+        out = _rsa.sign(d, key, backend=backend)
+    return _limbs_from_digits(out, _limb_width(ctx))
+
+
+# ---------------------------------------------------------------------------
+# configuration
+# ---------------------------------------------------------------------------
+
+_UNSET = object()
+
+
+class _ConfigureContext:
+    """Returned by configure(): a no-op unless used as a context
+    manager, in which case __exit__ restores the previous overrides."""
+
+    def __init__(self, prev: dict):
+        self._prev = prev
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        _config.set_overrides(self._prev)
+        return False
+
+
+def configure(*, mul_method=_UNSET, div_method=_UNSET,
+              modexp_backend=_UNSET, autotune=_UNSET) -> _ConfigureContext:
+    """Override dispatch decisions, process-wide or scoped.
+
+    Keyword-only; omitted knobs are left untouched, ``None`` clears an
+    override (back to env alias, then heuristics):
+
+      * ``mul_method``      one of core/mul.MUL_METHODS,
+      * ``div_method``      one of core/div.DIV_METHODS,
+      * ``modexp_backend``  one of core/modular.BACKENDS,
+      * ``autotune``        bool -- enable the kernel tile sweep.
+
+    Returns a context manager: ``with configure(...):`` restores the
+    previous values on exit; a bare call applies them permanently.
+    Replaces the deprecated REPRO_* env vars (still honored, one
+    DeprecationWarning each, at lower precedence)."""
+    updates: dict = {}
+    if mul_method is not _UNSET:
+        if mul_method is not None and mul_method not in _mul.MUL_METHODS:
+            raise ValueError(
+                f"unknown multiply method {mul_method!r}; choose from "
+                f"{_mul.MUL_METHODS}")
+        updates["mul_method"] = mul_method
+    if div_method is not _UNSET:
+        if div_method is not None and div_method not in _div.DIV_METHODS:
+            raise ValueError(
+                f"unknown division method {div_method!r}; choose from "
+                f"{_div.DIV_METHODS}")
+        updates["div_method"] = div_method
+    if modexp_backend is not _UNSET:
+        if modexp_backend is not None \
+                and modexp_backend not in _M.BACKENDS:
+            raise ValueError(
+                f"unknown backend {modexp_backend!r}; choose from "
+                f"{_M.BACKENDS}")
+        updates["modexp_backend"] = modexp_backend
+    if autotune is not _UNSET:
+        if autotune is not None and not isinstance(autotune, bool):
+            raise ValueError(
+                f"autotune must be a bool or None, got {autotune!r}")
+        updates["autotune"] = autotune
+    return _ConfigureContext(_config.set_overrides(updates))

@@ -127,6 +127,52 @@ def pick_modexp_window(exp_bits: int, cap: int | None = None) -> int:
 
 
 @dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    """Knobs for serve/bignum_engine.BignumEngine (the request-level
+    continuous-batching crypto server).
+
+    ``bucket_bits`` are the modulus-width tiers the shape-bucketed jit
+    cache quantizes requests into: a request for an ``nbits``-bit
+    modulus runs at the smallest bucket >= nbits, so any mix of natural
+    widths dispatches into a FINITE set of compiled shapes instead of
+    retracing per width.  The tiers mirror the paper's evaluation grid
+    (and MUL_DISPATCH's kernel ranges).  ``exp_bucket_bits`` does the
+    same for raw mod_exp exponent widths (RSA keys keep their natural
+    exponent width -- the key set is finite, so it's already a finite
+    shape set).
+
+    ``slots`` is the padded batch the engine flushes -- sized so the
+    fused ladder runs in its MODEXP_DISPATCH.fused_min_batch regime --
+    and ``max_wait_s`` bounds how long a lone request waits for
+    batchmates before a deadline flush serves a partial (padded) batch.
+    """
+
+    bucket_bits: Tuple[int, ...] = (
+        256, 512, 1024, 2048, 4096, 8192)
+    exp_bucket_bits: Tuple[int, ...] = (
+        16, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192)
+    slots: int = 8                    # >= MODEXP_DISPATCH.fused_min_batch
+    max_wait_s: float = 0.05          # deadline-flush bound per request
+
+
+SERVE = ServeConfig()
+
+
+def quantize_bits(nbits: int, buckets: Tuple[int, ...]) -> int:
+    """Smallest bucket >= ``nbits`` (the serve engine's shape
+    quantizer).  Raises when nbits overflows every tier so oversized
+    requests fail loudly instead of silently retracing at a new shape."""
+    if nbits < 1:
+        raise ValueError(f"nbits must be >= 1, got {nbits}")
+    for b in sorted(buckets):
+        if nbits <= b:
+            return b
+    raise ValueError(
+        f"operand width {nbits} bits exceeds the largest serve bucket; "
+        f"choose from buckets {tuple(sorted(buckets))}")
+
+
+@dataclasses.dataclass(frozen=True)
 class DoTBenchConfig:
     operand_bits: Tuple[int, ...] = (
         512, 1024, 2048, 3072, 4096, 6144, 8192, 12288,

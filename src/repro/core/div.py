@@ -424,23 +424,21 @@ def select_div_method(nbits_a: int, nbits_b: int, batch: int = 1) -> str:
     Newton chain's multiply launches at small widths.  Above it,
     reciprocal-divide ("recip"): the Newton multiplies route through the
     autotuned pipeline, so asymptotics follow the multiply backends.
-    The environment override REPRO_DIV_BACKEND wins over everything.
 
     Batch awareness mirrors mul.select_method: a kernel launch only
     amortizes over the batch axis, so tiny batches take the reciprocal
     path, whose multiplies then themselves dispatch to the small-batch
     jnp compositions.
-    """
-    import os
 
+    A ``repro.api.configure(div_method=...)`` override wins over
+    everything; the REPRO_DIV_BACKEND env var is its deprecated alias.
+    """
+    from repro import config as _rc
     from repro.configs.dot_bignum import DIV_DISPATCH, MUL_DISPATCH
 
-    env = os.environ.get("REPRO_DIV_BACKEND", "")
-    if env:
-        if env not in DIV_METHODS:
-            raise ValueError(
-                f"REPRO_DIV_BACKEND={env!r}; choose from {DIV_METHODS}")
-        return env
+    override = _rc.resolve("div_method", DIV_METHODS, "division method")
+    if override:
+        return override
     if batch < MUL_DISPATCH.kernel_min_batch:
         return "recip"
     if max(nbits_a, nbits_b) <= DIV_DISPATCH.schoolbook_max_bits:
@@ -478,7 +476,10 @@ def divmod_digits(a: jax.Array, b: jax.Array,
         q, r = _dops.dot_divmod_digits(a2, b2)
         return q.reshape(lead + (na,)), r.reshape(lead + (nb,))
     if method != "recip":
-        raise ValueError(f"unknown division method {method!r}")
+        raise ValueError(
+            f"unknown division method {method!r}; choose from "
+            f"{('auto',) + DIV_METHODS} (REPRO_DIV_BACKEND accepts the "
+            f"same names, minus 'auto')")
     return divmod_recip_digits(a, b, digit_bits)
 
 

@@ -514,19 +514,16 @@ def select_modexp_backend(nbits: int, batch: int = 1, ebits: int = 0,
     The fused full-ladder Pallas kernel amortizes over the batch axis
     only, so small batches (and tiny exponents, where the table build
     dominates) take the jnp windowed composition; a BarrettCtx (even
-    modulus) always routes to the Barrett ladder.  The environment
-    override REPRO_MODEXP_BACKEND wins over everything (ops knob for
-    A/B experiments without code changes)."""
-    import os
-
+    modulus) always routes to the Barrett ladder.  A
+    ``repro.api.configure(modexp_backend=...)`` override wins over
+    everything (ops knob for A/B experiments without code changes); the
+    REPRO_MODEXP_BACKEND env var is its deprecated alias."""
+    from repro import config as _rc
     from repro.configs.dot_bignum import MODEXP_DISPATCH as cfg
 
-    env = os.environ.get("REPRO_MODEXP_BACKEND", "")
-    if env:
-        if env not in BACKENDS:
-            raise ValueError(
-                f"REPRO_MODEXP_BACKEND={env!r}; choose from {BACKENDS}")
-        return _resolve_backend(env, ctx)
+    override = _rc.resolve("modexp_backend", BACKENDS, "modexp backend")
+    if override:
+        return _resolve_backend(override, ctx)
     if isinstance(ctx, BarrettCtx):
         return "barrett"
     if _DEFAULT_BACKEND != "jnp":

@@ -371,9 +371,10 @@ def select_method(nbits: int, batch: int = 1,
       (kernels/ntt_mul).
 
     ``prefer_mxu`` selects the int8 Toeplitz kernel where its range
-    allows (worth it when the MXU would otherwise sit idle).  The
-    environment override REPRO_MUL_BACKEND wins over everything (ops
-    knob for A/B experiments without code changes).
+    allows (worth it when the MXU would otherwise sit idle).  A
+    ``repro.api.configure(mul_method=...)`` override wins over
+    everything (ops knob for A/B experiments without code changes); the
+    REPRO_MUL_BACKEND env var is its deprecated alias.
 
     Batch awareness: the kernels tile the BATCH axis -- that is where
     the carry machinery amortizes.  Below ``cfg.kernel_min_batch``
@@ -389,16 +390,12 @@ def select_method(nbits: int, batch: int = 1,
     in this regime -- their huge-width multiplies ride the NTT tier
     automatically.
     """
-    import os
-
+    from repro import config as _rc
     from repro.configs.dot_bignum import MUL_DISPATCH as cfg
 
-    env = os.environ.get("REPRO_MUL_BACKEND", "")
-    if env:
-        if env not in MUL_METHODS:
-            raise ValueError(
-                f"REPRO_MUL_BACKEND={env!r}; choose from {MUL_METHODS}")
-        return env
+    override = _rc.resolve("mul_method", MUL_METHODS, "multiply method")
+    if override:
+        return override
     if batch < cfg.kernel_min_batch:
         return "dot" if nbits <= cfg.small_batch_dot_max_bits \
             else "ntt"

@@ -6,7 +6,8 @@ time the compiled kernel at each power-of-two candidate tile and cache
 the winner, keyed by ``(op, m, batch, digit_bits)``.
 
 Off by default -- the tiling heuristic is deterministic and good enough
-for tests/CI; set ``REPRO_AUTOTUNE=1`` to let benchmarks measure.  The
+for tests/CI; call ``repro.api.configure(autotune=True)`` (or set the
+deprecated ``REPRO_AUTOTUNE=1`` alias) to let benchmarks measure.  The
 cache is process-local (kernel specializations are jit-cached anyway, so
 a sweep costs one compile per candidate, once per key).
 
@@ -19,7 +20,6 @@ sweep can run real timed calls):
 """
 from __future__ import annotations
 
-import os
 import time
 from typing import Callable, Optional
 
@@ -31,8 +31,10 @@ _CACHE: dict = {}
 
 
 def enabled() -> bool:
-    return os.environ.get("REPRO_AUTOTUNE", "0").lower() not in (
-        "", "0", "false", "off")
+    """configure(autotune=...) wins; the deprecated REPRO_AUTOTUNE env
+    var is its alias; default off (see repro/config.py)."""
+    from repro import config as _rc
+    return _rc.autotune_enabled()
 
 
 def clear_cache() -> None:

@@ -1,0 +1,437 @@
+"""Request-level continuous batching for large-number crypto ops.
+
+The LM ServeEngine (serve/engine.py) batches token streams; this engine
+batches *arithmetic requests*: independent RSA sign / verify / decrypt
+and raw mod_exp calls arriving one at a time are aggregated into padded
+``slots``-lane batches so the fused windowed ladder runs in its
+``MODEXP_DISPATCH.fused_min_batch`` regime instead of at batch 1.
+
+Two mechanisms make an arbitrary request mix serve from a FINITE set of
+compiled programs (the retrace economics that motivate the design: a
+fresh XLA trace of a 1024-bit ladder costs seconds on this grid, the op
+itself milliseconds):
+
+* **Shape bucketing** -- a request's modulus width is quantized up to a
+  ``ServeConfig.bucket_bits`` tier (raw mod_exp exponent widths to
+  ``exp_bucket_bits``), so arbitrary natural widths collapse onto a few
+  padded shapes.  RSA-key ops keep their natural width: the key set is
+  finite, so it is already a finite shape set.
+* **Per-modulus program cache** -- the Pallas ladder bakes the
+  Montgomery constant n0p statically (kernels/dot_modmul/ops.py), so a
+  modulus CANNOT be traced data; the jit cache therefore keys on
+  ``(op, width-bucket, exp-bucket, modulus)`` and ``warm()``
+  pre-compiles the registered modulus/key set before traffic.
+
+Batching policy (continuous): requests queue per bucket key; a bucket
+flushes when it reaches ``slots`` lanes (full flush) or when its oldest
+request has waited ``max_wait_s`` (deadline flush, padded by repeating
+lane 0).  ``replay_trace`` replays a timed arrival trace against the
+engine event by event -- virtual arrival clock, real measured service
+times, single serial device -- and ``NaiveServer`` / ``replay_naive``
+is the one-request-at-a-time natural-shape baseline the benchmarks
+compare against.
+
+All arithmetic goes through the ``repro.api`` facade; this module never
+imports the digit-radix internals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro import api
+from repro.configs.dot_bignum import SERVE, ServeConfig, quantize_bits
+
+OPS = ("mod_exp", "rsa_sign", "rsa_verify", "rsa_decrypt")
+
+# (op, width bucket bits, exp bucket bits or None, modulus / key.n)
+BucketKey = Tuple[str, int, Optional[int], int]
+
+
+@dataclasses.dataclass
+class BignumRequest:
+    """One crypto call.  ``value`` is the natural-width uint32 limb
+    vector of the operand (mod_exp base, message, signature, or
+    ciphertext); ``modulus`` + ``exponent`` (python ints) for op
+    "mod_exp", ``key`` for the rsa_* ops.  The engine fills
+    ``arrival`` / ``deadline`` / ``completion`` / ``result``."""
+
+    rid: int
+    op: str
+    value: np.ndarray
+    modulus: Optional[int] = None
+    exponent: Optional[int] = None
+    key: Optional[api.RSAKey] = None
+    arrival: float = 0.0
+    deadline: float = 0.0
+    completion: Optional[float] = None
+    result: Optional[np.ndarray] = None
+
+    @property
+    def latency(self) -> float:
+        if self.completion is None:
+            raise ValueError(f"request {self.rid} not served yet")
+        return self.completion - self.arrival
+
+
+@dataclasses.dataclass
+class EngineStats:
+    traces: int = 0           # jit cache misses (python body executions)
+    programs: int = 0         # distinct compiled entry points
+    served: int = 0
+    batches: int = 0
+    flush_full: int = 0
+    flush_deadline: int = 0
+    padded_lanes: int = 0
+
+
+class BignumEngine:
+    """Continuous-batching server for the ops in ``OPS``.
+
+    The event API is clock-explicit so replays and tests are
+    deterministic: callers pass virtual times in, and every method that
+    may run device work returns the list of requests it completed
+    (empty when it only queued).  ``submit`` flushes on batch-full;
+    ``flush_next_due`` serves the earliest expired deadline;
+    ``drain_one`` force-flushes when the trace is over."""
+
+    def __init__(self, cfg: Optional[ServeConfig] = None, *,
+                 backend: Optional[str] = None):
+        self.cfg = cfg or SERVE
+        self.backend = backend
+        self.stats = EngineStats()
+        self._queues: Dict[BucketKey, List[BignumRequest]] = {}
+        self._deadlines: Dict[BucketKey, float] = {}
+        self._fns: Dict[BucketKey, Callable] = {}
+        self._ctxs: Dict[Tuple[int, int], object] = {}
+
+    # -- bucketing --------------------------------------------------------
+
+    def bucket_key(self, req: BignumRequest) -> BucketKey:
+        """Quantized jit-cache key for a request (public for tests)."""
+        if req.op not in OPS:
+            raise ValueError(
+                f"unknown serve op {req.op!r}; choose from {OPS}")
+        if req.op == "mod_exp":
+            if req.modulus is None or req.exponent is None:
+                raise ValueError(
+                    "mod_exp requests need modulus= and exponent=")
+            nbits = quantize_bits(req.modulus.bit_length(),
+                                  self.cfg.bucket_bits)
+            ebits = quantize_bits(max(1, req.exponent.bit_length()),
+                                  self.cfg.exp_bucket_bits)
+            return (req.op, nbits, ebits, req.modulus)
+        if req.key is None:
+            raise ValueError(f"{req.op} requests need key=")
+        return (req.op, req.key.bits, None, req.key.n)
+
+    def _ctx(self, modulus: int, nbits: int):
+        k = (modulus, nbits)
+        if k not in self._ctxs:
+            self._ctxs[k] = api.mod_setup(modulus, nbits)
+        return self._ctxs[k]
+
+    # -- compiled-program cache -------------------------------------------
+
+    def _fn(self, bkey: BucketKey, sample: BignumRequest) -> Callable:
+        if bkey in self._fns:
+            return self._fns[bkey]
+        op, nbits, _, _ = bkey
+        stats = self.stats
+        backend = self.backend
+        if op == "mod_exp":
+            ctx = self._ctx(sample.modulus, nbits)
+
+            def body(base, exp_bits, _ctx=ctx):
+                stats.traces += 1
+                return api.mod_exp(base, exp_bits, _ctx, backend=backend)
+        elif op == "rsa_decrypt":
+            key, crt = sample.key, sample.key.p != 0
+
+            def body(base, _key=key, _crt=crt):
+                stats.traces += 1
+                return api.rsa_decrypt(base, _key, backend=backend,
+                                       crt=_crt)
+        else:
+            f = api.rsa_sign if op == "rsa_sign" else api.rsa_verify
+            key = sample.key
+
+            def body(base, _f=f, _key=key):
+                stats.traces += 1
+                return _f(base, _key, backend=backend)
+        fn = jax.jit(body)
+        self._fns[bkey] = fn
+        stats.programs += 1
+        return fn
+
+    def _execute(self, bkey: BucketKey,
+                 reqs: List[BignumRequest]) -> np.ndarray:
+        """Pad ``reqs`` to a full ``slots`` batch and run the bucket's
+        compiled program; returns the (slots, limbs) result block."""
+        op, nbits, ebits, _ = bkey
+        slots = self.cfg.slots
+        fn = self._fn(bkey, reqs[0])
+        lw = nbits // 32 if op == "mod_exp" else -(-reqs[0].key.bits // 32)
+        base = np.zeros((slots, lw), np.uint32)
+        for i, r in enumerate(reqs):
+            v = np.asarray(r.value, np.uint32).reshape(-1)
+            base[i, : v.size] = v
+        base[len(reqs):] = base[0]              # pad: repeat lane 0
+        if op == "mod_exp":
+            rows = [np.asarray(api.exp_bits_msb(r.exponent, ebits))
+                    for r in reqs]
+            rows += [rows[0]] * (slots - len(reqs))
+            out = fn(base, np.stack(rows))
+        else:
+            out = fn(base)
+        return np.asarray(jax.block_until_ready(out))
+
+    # -- serving ----------------------------------------------------------
+
+    def warm(self, op: str, *, modulus: Optional[int] = None,
+             exponent: Optional[int] = None,
+             key: Optional[api.RSAKey] = None) -> None:
+        """Pre-compile the program for one (op, bucket, modulus) before
+        traffic (for mod_exp, ``exponent`` is a representative value --
+        only its quantized width matters).  Serving a warmed bucket
+        never traces again: snapshot ``stats.traces`` after warming to
+        assert the zero-retrace property."""
+        sample = BignumRequest(rid=-1, op=op, value=np.zeros(1, np.uint32),
+                               modulus=modulus, exponent=exponent, key=key)
+        self._execute(self.bucket_key(sample), [sample])
+
+    def submit(self, req: BignumRequest, now: float = 0.0
+               ) -> List[BignumRequest]:
+        """Enqueue; flushes and returns the batch when it fills."""
+        bkey = self.bucket_key(req)
+        req.arrival = now
+        req.deadline = now + self.cfg.max_wait_s
+        q = self._queues.setdefault(bkey, [])
+        q.append(req)
+        if len(q) == 1:
+            self._deadlines[bkey] = req.deadline
+        if len(q) >= self.cfg.slots:
+            return self._flush(bkey, "full")
+        return []
+
+    def next_deadline(self) -> Optional[float]:
+        return min(self._deadlines.values(), default=None)
+
+    def flush_next_due(self, now: float) -> List[BignumRequest]:
+        """Serve the earliest bucket whose deadline has expired."""
+        due = [(dl, k) for k, dl in self._deadlines.items() if dl <= now]
+        if not due:
+            return []
+        _, bkey = min(due, key=lambda t: t[0])
+        return self._flush(bkey, "deadline")
+
+    def drain_one(self) -> List[BignumRequest]:
+        """Force-flush one pending bucket (oldest deadline first)."""
+        if not self._deadlines:
+            return []
+        bkey = min(self._deadlines, key=self._deadlines.get)
+        return self._flush(bkey, "deadline")
+
+    def pending(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def _flush(self, bkey: BucketKey, reason: str) -> List[BignumRequest]:
+        reqs = self._queues.pop(bkey)
+        self._deadlines.pop(bkey, None)
+        out = self._execute(bkey, reqs)
+        for i, r in enumerate(reqs):
+            if r.op == "mod_exp":
+                r.result = out[i, : -(-r.modulus.bit_length() // 32)]
+            else:
+                r.result = out[i]
+        st = self.stats
+        st.served += len(reqs)
+        st.batches += 1
+        st.padded_lanes += self.cfg.slots - len(reqs)
+        if reason == "full":
+            st.flush_full += 1
+        else:
+            st.flush_deadline += 1
+        return list(reqs)
+
+
+# ---------------------------------------------------------------------------
+# one-at-a-time baseline
+# ---------------------------------------------------------------------------
+
+class NaiveServer:
+    """One-request-at-a-time baseline: every call runs at batch 1 and
+    its NATURAL width, jit-cached per (op, modulus, exponent width).  A
+    shape-following server like this retraces whenever a new natural
+    width or modulus shows up in traffic; ``warm()`` grants it the same
+    finite-key head start the engine gets, which isolates the batching
+    win from the retrace win in the benchmarks."""
+
+    def __init__(self, *, backend: Optional[str] = None):
+        self.backend = backend
+        self.stats = EngineStats()
+        self._fns: Dict[tuple, Callable] = {}
+
+    def _fn(self, req: BignumRequest) -> Callable:
+        if req.op not in OPS:
+            raise ValueError(
+                f"unknown serve op {req.op!r}; choose from {OPS}")
+        if req.op == "mod_exp":
+            key = (req.op, req.modulus, max(1, req.exponent.bit_length()))
+        else:
+            key = (req.op, req.key.n)
+        if key in self._fns:
+            return self._fns[key]
+        stats = self.stats
+        backend = self.backend
+        if req.op == "mod_exp":
+            ctx = api.mod_setup(req.modulus)
+
+            def body(base, exp_bits, _ctx=ctx):
+                stats.traces += 1
+                return api.mod_exp(base, exp_bits, _ctx, backend=backend)
+        elif req.op == "rsa_decrypt":
+            k, crt = req.key, req.key.p != 0
+
+            def body(base, _key=k, _crt=crt):
+                stats.traces += 1
+                return api.rsa_decrypt(base, _key, backend=backend,
+                                       crt=_crt)
+        else:
+            f = api.rsa_sign if req.op == "rsa_sign" else api.rsa_verify
+            k = req.key
+
+            def body(base, _f=f, _key=k):
+                stats.traces += 1
+                return _f(base, _key, backend=backend)
+        fn = jax.jit(body)
+        self._fns[key] = fn
+        stats.programs += 1
+        return fn
+
+    def serve(self, req: BignumRequest) -> np.ndarray:
+        fn = self._fn(req)
+        if req.op == "mod_exp":
+            lw = -(-req.modulus.bit_length() // 32)
+        else:
+            lw = -(-req.key.bits // 32)
+        base = np.zeros((1, lw), np.uint32)
+        v = np.asarray(req.value, np.uint32).reshape(-1)
+        base[0, : v.size] = v
+        if req.op == "mod_exp":
+            eb = np.asarray(api.exp_bits_msb(req.exponent))[None]
+            out = fn(base, eb)
+        else:
+            out = fn(base)
+        out = np.asarray(jax.block_until_ready(out))
+        req.result = out[0, :lw]
+        self.stats.served += 1
+        self.stats.batches += 1
+        return req.result
+
+    def warm(self, op: str, *, modulus: Optional[int] = None,
+             exponent: Optional[int] = None,
+             key: Optional[api.RSAKey] = None) -> None:
+        self.serve(BignumRequest(rid=-1, op=op,
+                                 value=np.zeros(1, np.uint32),
+                                 modulus=modulus, exponent=exponent,
+                                 key=key))
+        self.stats.served -= 1          # warm-ups don't count as traffic
+        self.stats.batches -= 1
+
+
+# ---------------------------------------------------------------------------
+# trace replay (virtual arrival clock, real measured service times)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ReplayResult:
+    n: int
+    makespan_s: float
+    ops_per_s: float
+    p50_ms: float
+    p99_ms: float
+    mean_ms: float
+
+
+def _summarize(reqs: List[BignumRequest]) -> ReplayResult:
+    lats = np.array([r.latency for r in reqs]) * 1e3
+    t0 = min(r.arrival for r in reqs)
+    t1 = max(r.completion for r in reqs)
+    makespan = max(t1 - t0, 1e-12)
+    return ReplayResult(len(reqs), makespan, len(reqs) / makespan,
+                        float(np.percentile(lats, 50)),
+                        float(np.percentile(lats, 99)),
+                        float(lats.mean()))
+
+
+def replay_trace(engine: BignumEngine,
+                 trace: List[BignumRequest]) -> ReplayResult:
+    """Event-driven replay: arrivals advance a virtual clock; each
+    engine call that completes requests is timed for real (the engine
+    blocks on device results) and that wall time becomes the service
+    time on the virtual clock.  The single device is a serial server:
+    work triggered at virtual time t starts at max(t, server-free)."""
+    trace = sorted(trace, key=lambda r: r.arrival)
+    free = 0.0
+    done: List[BignumRequest] = []
+    i = 0
+    while i < len(trace) or engine.pending():
+        nxt = trace[i].arrival if i < len(trace) else float("inf")
+        dl = engine.next_deadline()
+        if dl is not None and dl <= nxt:
+            start = max(dl, free)
+            t0 = time.perf_counter()
+            reqs = engine.flush_next_due(dl)
+            dt = time.perf_counter() - t0
+        else:
+            r = trace[i]
+            i += 1
+            start = max(r.arrival, free)
+            t0 = time.perf_counter()
+            reqs = engine.submit(r, r.arrival)
+            dt = time.perf_counter() - t0
+        if reqs:
+            free = start + dt
+            for q in reqs:
+                q.completion = free
+            done += reqs
+    return _summarize(done)
+
+
+def replay_naive(server: NaiveServer,
+                 trace: List[BignumRequest]) -> ReplayResult:
+    """Same replay model for the one-at-a-time baseline: each request
+    is served alone the moment the server frees up after its arrival
+    (compile time, if the shape/modulus is new, lands in its service
+    time -- that's the cost a shape-following server actually pays)."""
+    trace = sorted(trace, key=lambda r: r.arrival)
+    free = 0.0
+    for r in trace:
+        start = max(r.arrival, free)
+        t0 = time.perf_counter()
+        server.serve(r)
+        dt = time.perf_counter() - t0
+        r.completion = start + dt
+        free = r.completion
+    return _summarize(trace)
+
+
+def poisson_trace(ops: List[dict], n: int, rate_per_s: float,
+                  seed: int = 0) -> List[BignumRequest]:
+    """n requests with exponential interarrivals at ``rate_per_s``,
+    cycling through ``ops`` (dicts of BignumRequest kwargs minus
+    rid/arrival) in round-robin so every replay sees the same op mix
+    regardless of rate."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_per_s, size=n)
+    t = 0.0
+    out = []
+    for i in range(n):
+        t += float(gaps[i])
+        out.append(BignumRequest(rid=i, arrival=t, **ops[i % len(ops)]))
+    return out

@@ -1,0 +1,227 @@
+"""repro.api facade: one front door, one kwarg convention -- plus the
+configure() override registry, the deprecated REPRO_* env aliases, and
+the repo-standard "unknown ...; choose from ..." dispatcher errors."""
+import random
+import warnings
+
+import numpy as np
+import pytest
+
+import repro
+from repro import api
+from repro import config as config_mod
+from repro.core import div as DV
+from repro.core import modular as MOD
+from repro.core import mul as MUL
+
+PY = random.Random(1234)
+
+
+def _odd(bits):
+    return PY.getrandbits(bits) | 1 | (1 << (bits - 1))
+
+
+# ---------------------------------------------------------------------------
+# package surface
+# ---------------------------------------------------------------------------
+
+def test_lazy_package_reexports():
+    assert repro.mul is api.mul
+    assert repro.configure is api.configure
+    assert repro.api is api
+    assert "mod_exp" in dir(repro)
+    with pytest.raises(AttributeError):
+        repro.no_such_name
+
+
+def test_to_from_limbs_roundtrip():
+    x = _odd(100)
+    a = api.to_limbs(x, 128)
+    assert a.shape == (4,) and a.dtype == np.uint32
+    assert api.from_limbs(a) == x
+    xs = [PY.getrandbits(90) for _ in range(3)]
+    b = api.to_limbs(xs, 96)
+    assert b.shape == (3, 3)
+    assert api.from_limbs(b) == xs
+
+
+# ---------------------------------------------------------------------------
+# arithmetic front doors vs python-int oracles
+# ---------------------------------------------------------------------------
+
+def test_mul_matches_python_int():
+    xs = [PY.getrandbits(120) for _ in range(2)]
+    ys = [PY.getrandbits(120) for _ in range(2)]
+    out = api.mul(api.to_limbs(xs, 128), api.to_limbs(ys, 128))
+    assert api.from_limbs(out) == [x * y for x, y in zip(xs, ys)]
+
+
+def test_divmod_matches_python_int():
+    xs = [PY.getrandbits(120) for _ in range(2)]
+    ys = [PY.getrandbits(70) | 1 for _ in range(2)]
+    q, r = api.divmod(api.to_limbs(xs, 128), api.to_limbs(ys, 128))
+    assert api.from_limbs(q) == [x // y for x, y in zip(xs, ys)]
+    assert api.from_limbs(r) == [x % y for x, y in zip(xs, ys)]
+
+
+def test_to_decimal():
+    out = np.asarray(api.to_decimal(api.to_limbs(1234567, 64), 10))
+    assert out.tolist() == [0, 0, 0, 1, 2, 3, 4, 5, 6, 7]
+
+
+def test_mod_exp_int_args_single_lane():
+    n = _odd(96)
+    base, e = PY.randrange(2, n), 65537
+    out = api.mod_exp(api.to_limbs(base, 96), e, n)
+    assert api.from_limbs(np.asarray(out)) == pow(base, e, n)
+
+
+def test_mod_exp_prebuilt_ctx_and_nbits_bucketing():
+    n = _odd(80)
+    base, e = PY.randrange(2, n), _odd(40)
+    want = pow(base, e, n)
+    # natural width vs padded-to-bucket width: same value out
+    out_nat = api.mod_exp(api.to_limbs([base], 80), e, n)
+    ctx = api.mod_setup(n, 128)
+    out_pad = api.mod_exp(api.to_limbs([base], 80), e, ctx)
+    assert api.from_limbs(np.asarray(out_nat)) == [want]
+    assert api.from_limbs(np.asarray(out_pad))[0] == want
+
+
+def test_mod_exp_even_modulus_routes_barrett():
+    n = _odd(64) + 1                  # even: Montgomery impossible
+    base, e = PY.randrange(2, n), 12345
+    out = api.mod_exp(api.to_limbs([base], 64), e, n)
+    assert api.from_limbs(np.asarray(out)) == [pow(base, e, n)]
+
+
+def test_rsa_sign_verify_decrypt_roundtrip():
+    key = api.generate_key(128, seed=7)
+    msg = api.digest_int(b"facade", key.bits) % key.n
+    ml = api.to_limbs([msg], key.bits)
+    sig = api.rsa_sign(ml, key)
+    assert api.from_limbs(np.asarray(sig)) == [pow(msg, key.d, key.n)]
+    back = api.rsa_verify(sig, key)
+    assert api.from_limbs(np.asarray(back)) == [msg]
+    cipher = api.to_limbs([pow(msg, key.e, key.n)], key.bits)
+    assert api.from_limbs(np.asarray(api.rsa_decrypt(cipher, key))) == [msg]
+    assert api.from_limbs(np.asarray(
+        api.rsa_decrypt(cipher, key, crt=False))) == [msg]
+
+
+# ---------------------------------------------------------------------------
+# configure(): scoping, precedence, validation
+# ---------------------------------------------------------------------------
+
+def test_configure_scoped_restores_previous():
+    assert config_mod.get_override("mul_method") is None
+    with api.configure(mul_method="schoolbook"):
+        assert MUL.select_method(1024) == "schoolbook"
+        with api.configure(mul_method="dot"):
+            assert MUL.select_method(1024) == "dot"
+        assert MUL.select_method(1024) == "schoolbook"
+    assert config_mod.get_override("mul_method") is None
+
+
+def test_configure_beats_env_alias(monkeypatch):
+    monkeypatch.setenv("REPRO_MODEXP_BACKEND", "jnp")
+    with api.configure(modexp_backend="reference"):
+        assert MOD.select_modexp_backend(512, batch=64,
+                                         ebits=512) == "reference"
+    assert MOD.select_modexp_backend(512, batch=64, ebits=512) == "jnp"
+    with api.configure(div_method="recip"):
+        monkeypatch.setenv("REPRO_DIV_BACKEND", "schoolbook")
+        assert DV.select_div_method(256, 256) == "recip"
+
+
+def test_configure_none_clears_override():
+    api.configure(div_method="recip")
+    try:
+        assert DV.select_div_method(4096, 4096) == "recip"
+    finally:
+        api.configure(div_method=None)
+    assert config_mod.get_override("div_method") is None
+
+
+@pytest.mark.parametrize("kwargs,fragment", [
+    (dict(mul_method="bogus"), "multiply method"),
+    (dict(div_method="bogus"), "division method"),
+    (dict(modexp_backend="bogus"), "backend"),
+    (dict(autotune="yes"), "autotune"),
+])
+def test_configure_validates(kwargs, fragment):
+    with pytest.raises(ValueError) as e:
+        api.configure(**kwargs)
+    assert fragment in str(e.value)
+
+
+def test_configure_lists_valid_options_in_error():
+    with pytest.raises(ValueError) as e:
+        api.configure(mul_method="bogus")
+    for name in MUL.MUL_METHODS:
+        assert name in str(e.value)
+
+
+def test_configure_rejects_unknown_option():
+    with pytest.raises(TypeError):
+        api.configure(frobnicate=1)
+    with pytest.raises(TypeError):
+        config_mod.set_overrides({"frobnicate": 1})
+
+
+def test_autotune_override_and_env(monkeypatch):
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    assert config_mod.autotune_enabled() is False
+    with api.configure(autotune=True):
+        assert config_mod.autotune_enabled() is True
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    assert config_mod.autotune_enabled() is True
+    with api.configure(autotune=False):     # configure beats env
+        assert config_mod.autotune_enabled() is False
+
+
+# ---------------------------------------------------------------------------
+# deprecated env aliases + dispatcher error-message contract
+# ---------------------------------------------------------------------------
+
+def test_env_alias_warns_deprecation_once(monkeypatch):
+    monkeypatch.setenv("REPRO_DIV_BACKEND", "recip")
+    config_mod._env_warned.discard("REPRO_DIV_BACKEND")
+    with pytest.warns(DeprecationWarning, match="REPRO_DIV_BACKEND"):
+        assert DV.select_div_method(256, 256) == "recip"
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        DV.select_div_method(256, 256)
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
+
+
+@pytest.mark.parametrize("env_var,call", [
+    ("REPRO_MUL_BACKEND", lambda: MUL.select_method(1024)),
+    ("REPRO_DIV_BACKEND", lambda: DV.select_div_method(256, 256)),
+    ("REPRO_MODEXP_BACKEND",
+     lambda: MOD.select_modexp_backend(512, batch=64, ebits=512)),
+])
+def test_stale_env_value_is_identifiable(env_var, call, monkeypatch):
+    monkeypatch.setenv(env_var, "bogus")
+    with pytest.raises(ValueError) as e:
+        call()
+    assert env_var in str(e.value) and "bogus" in str(e.value)
+
+
+def test_divmod_unknown_method_message():
+    a = api.to_limbs([5], 64)
+    with pytest.raises(ValueError) as e:
+        api.divmod(a, a, method="bogus")
+    msg = str(e.value)
+    for name in DV.DIV_METHODS:
+        assert name in msg
+    assert "REPRO_DIV_BACKEND" in msg and "auto" in msg
+
+
+def test_set_default_backend_unknown_message():
+    with pytest.raises(ValueError) as e:
+        MOD.set_default_backend("bogus")
+    msg = str(e.value)
+    for name in MOD.BACKENDS:
+        assert name in msg
