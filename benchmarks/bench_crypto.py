@@ -16,9 +16,16 @@ structures over per-lane full-width exponents:
   * ``pallas_fused``     the fused full-ladder windowed kernel: ONE
                          launch per modexp, table VMEM-resident.
 
-The committed benchmarks/BENCH_modexp.json floors gate pallas_fused in
-CI (conservative floors, not point estimates: interpret-mode ratios
-swing 1.5-3x on loaded CPU runners).
+Two satellite sections ride the same record format: the EVEN-modulus
+head-to-head (``barrett`` jnp composition vs the ``barrett_fused``
+single-launch Barrett ladder -- the moduli Montgomery cannot serve)
+and the sub-batch packed ladder (batch 4 < the tile minimum: the
+dispatcher pads lanes and fuses anyway, recorded as ``pallas_packed``
+vs ``jnp``).
+
+The committed benchmarks/BENCH_modexp.json floors gate pallas_fused,
+barrett_fused, and pallas_packed in CI (conservative floors, not point
+estimates: interpret-mode ratios swing 1.5-3x on loaded CPU runners).
 
 ``--smoke`` (or run(smoke=True)) shrinks to one tiny key and 2 reps so
 CI can exercise the full code path in seconds (the bit-serial baseline
@@ -99,6 +106,63 @@ def _modexp_records(out, records, sizes, batch, iters, with_bitserial):
                            f"speedup_vs_jnp={t_jnp / t:.2f}x"))
 
 
+def _barrett_records(out, records, sizes, batch, iters):
+    """EVEN-modulus modexp: Montgomery is unavailable (n must be odd),
+    so the contest is the jnp Barrett composition vs the fused Barrett
+    ladder kernel (one launch, n/mu as runtime rows)."""
+    rng = np.random.default_rng(41)
+    for nbits in sizes:
+        n = (L.random_bigints(rng, 1, nbits)[0] | (1 << (nbits - 1))) & ~1
+        ctx = MOD.mod_setup(n, nbits)
+        xs = [v % n for v in L.random_bigints(rng, batch, nbits)]
+        md = jnp.asarray(np.stack(
+            [L.int_to_limbs(x, ctx.m, 16) for x in xs]))
+        eb = jnp.asarray(np.stack(
+            [MOD.exp_bits_msb(int(e) | (1 << (nbits - 1)) | 1, nbits)
+             for e in L.random_bigints(rng, batch, nbits)]))
+        t_jnp = None
+        for be in ("barrett", "barrett_fused"):
+            fn = jax.jit(
+                lambda b, e, c=ctx, k=be: MOD.mod_exp(b, e, c, backend=k))
+            t = time_fn(fn, md, eb, iters=iters, warmup=1)
+            if be == "barrett":
+                t_jnp = t
+            record(records, op="modexp", bits=nbits, batch=batch,
+                   backend=be, seconds_per_call=t, baseline_seconds=t_jnp)
+            out.append(row(f"crypto/modexp{nbits}even/{be}", t / batch,
+                           f"speedup_vs_jnp={t_jnp / t:.2f}x"))
+
+
+def _packed_records(out, records, sizes, batch, iters):
+    """Sub-batch lane packing: batches below the tile minimum pad up and
+    still take the fused ladder (dispatch's packed_min_batch floor);
+    this times that padded fused launch against the jnp ladder at the
+    same tiny batch, so CI notices if padding ever makes the fused
+    route a de-optimization."""
+    rng = np.random.default_rng(43)
+    for nbits in sizes:
+        n = L.random_bigints(rng, 1, nbits)[0] | (1 << (nbits - 1)) | 1
+        ctx = MOD.mont_setup(n, nbits)
+        xs = [v % n for v in L.random_bigints(rng, batch, nbits)]
+        md = jnp.asarray(np.stack(
+            [L.int_to_limbs(x, ctx.m, 16) for x in xs]))
+        eb = jnp.asarray(np.stack(
+            [MOD.exp_bits_msb(int(e) | (1 << (nbits - 1)) | 1, nbits)
+             for e in L.random_bigints(rng, batch, nbits)]))
+        t_jnp = None
+        for be, backend in (("jnp", "jnp"), ("pallas_packed", "pallas")):
+            fn = jax.jit(
+                lambda b, e, c=ctx, k=backend: MOD.mod_exp(b, e, c,
+                                                           backend=k))
+            t = time_fn(fn, md, eb, iters=iters, warmup=1)
+            if be == "jnp":
+                t_jnp = t
+            record(records, op="modexp", bits=nbits, batch=batch,
+                   backend=be, seconds_per_call=t, baseline_seconds=t_jnp)
+            out.append(row(f"crypto/modexp{nbits}b{batch}/{be}", t / batch,
+                           f"speedup_vs_jnp={t_jnp / t:.2f}x"))
+
+
 def _latency_percentiles(fn, arg, iters=12):
     fn(arg).block_until_ready()
     ts = []
@@ -127,6 +191,8 @@ def run(full: bool = False, smoke: bool = False, records: list | None = None):
         # is None) already ran it via benchmarks.run -- skip the
         # duplicate timing, it is the slowest part of the smoke suite.
         _modexp_records(out, records, mx_sizes, mx_batch, mx_iters, bitserial)
+        _barrett_records(out, records, mx_sizes, mx_batch, mx_iters)
+        _packed_records(out, records, mx_sizes, 4, mx_iters)
     for bits in sizes:
         key = RSA.generate_key(bits=bits, seed=bits)
         msgs = [RSA.digest_int(f"m{i}".encode(), bits) for i in range(batch)]

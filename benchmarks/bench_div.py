@@ -11,6 +11,9 @@ Emits machine-readable records (op "div"; the "recip" backend is the
 jnp-composition baseline the speedup ratios are measured against) when
 driven through benchmarks/run.py --json-out; the committed
 benchmarks/BENCH_div.json floors feed `run.py --check-baseline` in CI.
+The "recip_cached" row measures the fixed-divisor reciprocal path
+(``b_const``) against the same divide with the divisor treated as
+runtime data -- the prepared-operand NTT cache's end-to-end win.
 """
 from __future__ import annotations
 
@@ -65,8 +68,37 @@ def run(full: bool = False, smoke: bool = False, records=None):
                    backend=method, seconds_per_call=t,
                    baseline_seconds=t_jnp)
 
-    # the pi workload's scalar fast path (divisor < 2**16)
+    # fixed-divisor reciprocal divide: b_const rides the prepared-operand
+    # NTT cache (forward transforms of the divisor's Newton slices and
+    # the q*b check multiply are baked once at trace time instead of
+    # recomputed per call per lane).  The dividend is twice the divisor
+    # width so the Newton chain runs at quotient precision -- the
+    # RSA-CRT / base-conversion repeat-divide shape.
+    bits_a, bits_b = (4096, 2048) if smoke else (8192, 4096)
+    rc_batch = 32 if smoke else 64
+    xs = L.random_bigints(rng, rc_batch, bits_a)
+    c_int = int(L.random_bigints(rng, 1, bits_b)[0]) | (1 << (bits_b - 1))
     import jax.numpy as jnp
+    import repro.api as api
+    a_rc = jnp.asarray(L.ints_to_batch([int(x) for x in xs], bits_a // 32))
+    b_rc = jnp.asarray(L.ints_to_batch([c_int] * rc_batch, bits_b // 32))
+    f_cold = jax.jit(lambda x, y: DV.divmod_limbs32(x, y, method="recip"))
+    f_cached = jax.jit(lambda x, y: DV.divmod_limbs32(
+        x, y, method="recip", b_const=c_int))
+    # the prepared-operand cache lives in the NTT tier; pin the chain's
+    # multiplies there (also what keeps this trace O(log n) -- the
+    # karatsuba composition takes MINUTES of XLA compile at this width)
+    with api.configure(mul_method="ntt"):
+        t_cold = time_fn(f_cold, a_rc, b_rc, iters=iters)
+        t_cached = time_fn(f_cached, a_rc, b_rc, iters=iters)
+    out.append(row(f"div/{bits_a}b_by_{bits_b}b/recip_cached",
+                   t_cached / rc_batch,
+                   f"speedup_vs_cold={t_cold / t_cached:.2f}x"))
+    record(records, op="div", bits=bits_a, batch=rc_batch,
+           backend="recip_cached", seconds_per_call=t_cached,
+           baseline_seconds=t_cold)
+
+    # the pi workload's scalar fast path (divisor < 2**16)
     m = 64
     x = jnp.asarray(L.ints_to_batch(L.random_bigints(rng, batch, 32 * m), m))
     from repro.core.mul import split_digits

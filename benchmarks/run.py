@@ -89,7 +89,8 @@ def write_json(suite: str, records: list, out_dir: str) -> str:
 
 def check_baseline(suite: str, records: list,
                    tolerance: float = REGRESS_TOLERANCE,
-                   margins: list[str] | None = None) -> list[str]:
+                   margins: list[str] | None = None,
+                   infos: list[str] | None = None) -> list[str]:
     """Regression messages for Pallas backends vs the committed baseline.
 
     Compares the machine-independent speedup-vs-jnp ratio (both sides of
@@ -97,13 +98,16 @@ def check_baseline(suite: str, records: list,
     out); only keys present in both sets are judged.  The gate covers
     the multiply pipeline at kernel-sized operands (op "mul", >= 512
     bits, including the huge-operand "ntt" tier), the division kernel
-    (op "div", >= 256 bits), the fused windowed modexp ladder (op
-    "modexp", >= 512 bits -- both the fused kernel and the bit-serial
-    composition it must keep beating), and the serving engine's
-    batched-vs-naive throughput ratio (op "serve", backend "engine",
-    see bench_serve): smaller micro rows and the add
-    strategy sweep are recorded for the trajectory but their per-call
-    times are too small for run-to-run-stable ratios.
+    (op "div", >= 256 bits: the schoolbook kernel and the fixed-divisor
+    "recip_cached" reciprocal path riding the prepared-operand NTT
+    cache), the fused windowed modexp ladders (op "modexp", >= 512 bits
+    -- the Montgomery fused kernel, the bit-serial composition it must
+    keep beating, and the Barrett "barrett_fused" kernel vs its jnp
+    composition), and the serving engine's batched-vs-naive throughput
+    ratio (op "serve", backend "engine", see bench_serve): smaller
+    micro rows and the add strategy sweep are recorded for the
+    trajectory but their per-call times are too small for
+    run-to-run-stable ratios.
 
     ``margins``, when given, collects one human-readable line per GATED
     key -- measured ratio, committed floor, and headroom -- so CI logs
@@ -111,6 +115,12 @@ def check_baseline(suite: str, records: list,
     (the deflake contract: floors sit at ~0.5x of measured ratios, see
     the module docstring; a margin trending toward 0 is the signal to
     investigate before the hard gate fires).
+
+    ``infos``, when given, collects one line per op-eligible row the
+    gate filters SKIP (trajectory-only rows: below min_bits, a
+    non-gated backend, or a key with no committed floor) so the CI log
+    still shows their measured ratios -- headroom you can read without
+    promoting the row to a hard gate.
     """
     path = _baseline_path(suite)
     if not os.path.exists(path):
@@ -119,23 +129,34 @@ def check_baseline(suite: str, records: list,
         baseline = {_key(r): r for r in json.load(f)["records"]}
     problems = []
     min_bits = {"mul": 512, "div": 256, "modexp": 512, "serve": 256}
-    for rec in records:
+
+    def gated(rec) -> bool:
         if rec["op"] not in min_bits or rec["bits"] < min_bits[rec["op"]]:
-            continue
+            return False
         if rec["op"] == "div":
-            if rec["backend"] != "schoolbook":
-                continue
-        elif rec["op"] == "serve":
+            # schoolbook kernel + the fixed-divisor cached-reciprocal path
+            return rec["backend"] in ("schoolbook", "recip_cached")
+        if rec["op"] == "serve":
             # gate the headline engine-vs-cold-naive throughput ratio;
             # engine_vs_warm and naive rows are trajectory-only
-            if rec["backend"] != "engine":
-                continue
-        elif "pallas" not in rec["backend"] and "kernel" not in rec["backend"] \
-                and rec["backend"] != "ntt":
+            return rec["backend"] == "engine"
+        return ("pallas" in rec["backend"] or "kernel" in rec["backend"]
+                or rec["backend"] in ("ntt", "barrett_fused"))
+
+    for rec in records:
+        if not rec.get("speedup_vs_jnp"):
             continue
         base = baseline.get(_key(rec))
-        if not base or not base.get("speedup_vs_jnp") \
-                or not rec.get("speedup_vs_jnp"):
+        if not gated(rec) or not base or not base.get("speedup_vs_jnp"):
+            if infos is not None and rec["op"] in min_bits \
+                    and rec["speedup_vs_jnp"] != 1.0:
+                committed = (f"committed {base['speedup_vs_jnp']:.2f}x"
+                             if base and base.get("speedup_vs_jnp")
+                             else "no committed floor")
+                infos.append(
+                    f"{suite}:{'/'.join(map(str, _key(rec)))} measured "
+                    f"{rec['speedup_vs_jnp']:.2f}x ({committed}; "
+                    f"trajectory row, ungated)")
             continue
         floor = base["speedup_vs_jnp"] * (1.0 - tolerance)
         if margins is not None:
@@ -200,9 +221,13 @@ def main() -> None:
         # must not overwrite the baseline the check compares against
         if records and args.check_baseline:
             margins: list[str] = []
-            regressions.extend(check_baseline(name, records, margins=margins))
+            infos: list[str] = []
+            regressions.extend(check_baseline(name, records,
+                                              margins=margins, infos=infos))
             for line in margins:
                 print(f"# perf-gate: {line}", flush=True)
+            for line in infos:
+                print(f"# info: {line}", flush=True)
         if records and args.json_out:
             path = write_json(name, records, args.json_out)
             print(f"# wrote {path} ({len(records)} records)", flush=True)

@@ -56,8 +56,8 @@ RSAKey = _rsa.RSAKey
 
 __all__ = [
     "mul", "divmod", "mod_exp", "rsa_sign", "rsa_verify", "rsa_decrypt",
-    "to_decimal", "configure", "to_limbs", "from_limbs", "mod_setup",
-    "exp_bits_msb", "generate_key", "digest_int", "RSAKey",
+    "to_decimal", "configure", "cache_stats", "to_limbs", "from_limbs",
+    "mod_setup", "exp_bits_msb", "generate_key", "digest_int", "RSAKey",
 ]
 
 
@@ -116,11 +116,15 @@ def mul(a, b, *, method: str = "auto") -> jax.Array:
     return _mul.mul_limbs32(a, b, method=method)
 
 
-def divmod(a, b, *, method: str = "auto"):  # noqa: A001 - facade name
+def divmod(a, b, *, method: str = "auto",
+           b_const: int | None = None):  # noqa: A001 - facade name
     """Exact floor (quotient, remainder): (..., ma) // (..., mb) uint32
     limbs -> ((..., ma), (..., mb)).  ``method``: "auto" or one of
-    core/div.DIV_METHODS."""
-    return _div.divmod_limbs32(a, b, method=method)
+    core/div.DIV_METHODS.  ``b_const`` declares the divisor a host-known
+    constant (b must hold that value in every lane): the reciprocal
+    path's fixed-operand multiplies then reuse cached forward NTTs
+    (see cache_stats()["operand"])."""
+    return _div.divmod_limbs32(a, b, method=method, b_const=b_const)
 
 
 def to_decimal(x, n_dec: int) -> jax.Array:
@@ -210,7 +214,8 @@ class _ConfigureContext:
 
 
 def configure(*, mul_method=_UNSET, div_method=_UNSET,
-              modexp_backend=_UNSET, autotune=_UNSET) -> _ConfigureContext:
+              modexp_backend=_UNSET, autotune=_UNSET,
+              ntt_cache_entries=_UNSET) -> _ConfigureContext:
     """Override dispatch decisions, process-wide or scoped.
 
     Keyword-only; omitted knobs are left untouched, ``None`` clears an
@@ -219,7 +224,12 @@ def configure(*, mul_method=_UNSET, div_method=_UNSET,
       * ``mul_method``      one of core/mul.MUL_METHODS,
       * ``div_method``      one of core/div.DIV_METHODS,
       * ``modexp_backend``  one of core/modular.BACKENDS,
-      * ``autotune``        bool -- enable the kernel tile sweep.
+      * ``autotune``        bool -- enable the kernel tile sweep,
+      * ``ntt_cache_entries``  int >= 0 -- LRU capacity of the
+        prepared-operand NTT cache (kernels/ntt_mul); 0 disables the
+        prepared path entirely (the A/B switch benchmarks use), None
+        restores the default (see kernels/ntt_mul/ops.
+        DEFAULT_CACHE_ENTRIES).
 
     Returns a context manager: ``with configure(...):`` restores the
     previous values on exit; a bare call applies them permanently.
@@ -250,4 +260,41 @@ def configure(*, mul_method=_UNSET, div_method=_UNSET,
             raise ValueError(
                 f"autotune must be a bool or None, got {autotune!r}")
         updates["autotune"] = autotune
+    if ntt_cache_entries is not _UNSET:
+        if ntt_cache_entries is not None and (
+                not isinstance(ntt_cache_entries, int)
+                or isinstance(ntt_cache_entries, bool)
+                or ntt_cache_entries < 0):
+            raise ValueError(
+                f"ntt_cache_entries must be an int >= 0 or None, got "
+                f"{ntt_cache_entries!r}")
+        updates["ntt_cache_entries"] = ntt_cache_entries
     return _ConfigureContext(_config.set_overrides(updates))
+
+
+def cache_stats() -> dict:
+    """Hit/miss/size counters for every process-level arithmetic cache:
+
+      * ``twiddle``  -- the lru_cache of per-(prime, N) NTT twiddle
+        tables (kernels/ntt_mul.twiddle_tables),
+      * ``operand``  -- the prepared-operand NTT cache (forward
+        transforms of host-known constants, LRU-bounded by
+        ``configure(ntt_cache_entries=...)``),
+      * ``autotune`` -- the kernel tile-sweep cache (hits/misses only
+        tick while ``configure(autotune=True)``).
+
+    Returns plain dicts of ints -- cheap to call, safe to log from
+    serving loops; the ops knob for verifying that repeat-operand work
+    is actually being reused (a cold ``operand`` cache under a
+    repeat-multiply-by-constant workload means b_const isn't being
+    threaded)."""
+    from repro.kernels.common import autotune as _at
+    from repro.kernels.ntt_mul import ops as _nops
+
+    tw = _nops.twiddle_tables.cache_info()
+    return {
+        "twiddle": {"hits": tw.hits, "misses": tw.misses,
+                    "entries": tw.currsize, "capacity": tw.maxsize},
+        "operand": _nops.operand_cache_stats(),
+        "autotune": _at.cache_stats(),
+    }

@@ -25,8 +25,11 @@ from __future__ import annotations
 import os
 import warnings
 
-OVERRIDE_NAMES = ("mul_method", "div_method", "modexp_backend", "autotune")
+OVERRIDE_NAMES = ("mul_method", "div_method", "modexp_backend", "autotune",
+                  "ntt_cache_entries")
 
+# ntt_cache_entries has no env alias: it never existed as a REPRO_* var,
+# so there is no legacy spelling to keep working.
 ENV_ALIASES = {
     "mul_method": "REPRO_MUL_BACKEND",
     "div_method": "REPRO_DIV_BACKEND",
@@ -59,7 +62,9 @@ def set_overrides(updates: dict) -> dict:
 
 
 def _env_value(name: str):
-    env_var = ENV_ALIASES[name]
+    env_var = ENV_ALIASES.get(name)
+    if env_var is None:
+        return None
     raw = os.environ.get(env_var, "")
     if not raw:
         return None
@@ -83,7 +88,7 @@ def resolve(name: str, valid=None, what: str = "value"):
     src = f"repro.api.configure({name}=...)"
     if value is None:
         value = _env_value(name)
-        src = ENV_ALIASES[name]
+        src = ENV_ALIASES.get(name, src)
     if value is None:
         return None
     if valid is not None and value not in valid:

@@ -83,12 +83,21 @@ class ModExpDispatchConfig:
     kernels/README.md)."""
 
     window_bits: int = 4              # max window size w (table = 2**w rows)
-    fused_min_batch: int = 8          # below: jnp windowed ladder
+    fused_min_batch: int = 8          # batch that fills a tile outright
     fused_max_bits: int = 8192        # above: jnp windowed ladder
     # Exponents shorter than this skip the fused kernel: at a handful of
     # windows the table build dominates and a kernel launch cannot pay
     # for itself (e.g. RSA verify with e = 65537).
     fused_min_exp_bits: int = 32
+    # The dispatch floor for the fused ladder.  Batches in
+    # [packed_min_batch, fused_min_batch) don't fill a tile on their
+    # own; the kernel wrappers pad the batch up to the tile minimum
+    # (kernels/common/tiling.MIN_TILE) and run the fused ladder anyway
+    # -- the padded lanes ride for free on the VPU's sublane axis, so
+    # one padded launch still beats ~nbits jnp-composition dispatches.
+    # Below packed_min_batch even the padded launch loses to the jnp
+    # ladder's lower fixed cost.
+    packed_min_batch: int = 4
 
 
 MODEXP_DISPATCH = ModExpDispatchConfig()

@@ -175,10 +175,15 @@ def shift_right_bits(x: jax.Array, s: jax.Array,
 # ---------------------------------------------------------------------------
 
 def mul_digits_via_pipeline(a: jax.Array, b: jax.Array,
-                            digit_bits: int = DIGIT_BITS) -> jax.Array:
+                            digit_bits: int = DIGIT_BITS,
+                            b_const: int | None = None) -> jax.Array:
     """(..., m) x (..., m) normalized digits -> (..., 2m) full product,
     computed by packing to 32-bit limbs and dispatching through
-    core/mul.select_method (the autotuned multiply pipeline)."""
+    core/mul.select_method (the autotuned multiply pipeline).
+
+    ``b_const`` declares b a host-known fixed value (every lane equal to
+    it): the NTT tier then reuses its cached forward transform
+    (kernels/ntt_mul prepared operands); other tiers ignore it."""
     m = a.shape[-1]
     # the Pallas entry points flatten leading axes per operand, so an
     # unbatched constant (e.g. a reciprocal row) must be broadcast to
@@ -189,16 +194,20 @@ def mul_digits_via_pipeline(a: jax.Array, b: jax.Array,
     m32 = -(-(m * digit_bits) // 32)
     a32 = join_digits(a, digit_bits, m32)
     b32 = join_digits(b, digit_bits, m32)
-    p32 = mul_limbs32(a32, b32, method="auto")         # (..., 2*m32)
+    p32 = mul_limbs32(a32, b32, method="auto",
+                      b_const=b_const)                 # (..., 2*m32)
     return split_digits(p32, digit_bits)[..., : 2 * m]
 
 
 def _mul_equalized(a: jax.Array, b: jax.Array,
-                   digit_bits: int = DIGIT_BITS) -> jax.Array:
-    """Pad to a common width and multiply via the pipeline; (..., wa+wb)."""
+                   digit_bits: int = DIGIT_BITS,
+                   b_const: int | None = None) -> jax.Array:
+    """Pad to a common width and multiply via the pipeline; (..., wa+wb).
+    Zero-padding does not change b's value, so ``b_const`` passes through."""
     wa, wb = a.shape[-1], b.shape[-1]
     w = max(wa, wb)
-    p = mul_digits_via_pipeline(_pad_to(a, w), _pad_to(b, w), digit_bits)
+    p = mul_digits_via_pipeline(_pad_to(a, w), _pad_to(b, w), digit_bits,
+                                b_const=b_const)
     return p[..., : wa + wb]
 
 
@@ -229,7 +238,8 @@ def div_small(x: jax.Array, s, digit_bits: int = DIGIT_BITS) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def recip_digits(b_norm: jax.Array,
-                 digit_bits: int = DIGIT_BITS) -> jax.Array:
+                 digit_bits: int = DIGIT_BITS,
+                 b_norm_int: int | None = None) -> jax.Array:
     """v ~= floor(D**(2*nb) / b_norm) for top-bit-normalized divisors.
 
     b_norm: (..., nb) normalized digits with the top bit set, i.e. value
@@ -249,6 +259,11 @@ def recip_digits(b_norm: jax.Array,
     every level: the reciprocal NEVER overestimates, which is what lets
     divmod correct with forward (add-only) steps.  Total multiply work is
     a geometric series ~= 3 full-width products.
+
+    ``b_norm_int`` declares the divisor a host-known constant (equal in
+    every lane to b_norm's value): each level's top-q-digit slice Bq is
+    then itself host-known (b_norm_int >> ((nb-q) * digit_bits)), so
+    every x*Bq multiply rides the prepared-operand NTT cache.
     """
     nb = b_norm.shape[-1]
     D = 1 << digit_bits
@@ -263,9 +278,12 @@ def recip_digits(b_norm: jax.Array,
                          v >> jnp.uint32(digit_bits)], axis=-1)  # (..., 2)
     def newton_step(v, p, q):
         Bq = b_norm[..., nb - q:]                      # (..., q)
+        Bq_int = (b_norm_int >> ((nb - q) * digit_bits)
+                  if b_norm_int is not None else None)
         x = jnp.concatenate(
             [jnp.zeros(lead + (q - p,), U32), v], axis=-1)  # (..., q+1)
-        t1 = _mul_equalized(x, Bq, digit_bits)         # (..., 2q+1), < 2*D**2q
+        t1 = _mul_equalized(x, Bq, digit_bits,
+                            b_const=Bq_int)            # (..., 2q+1), < 2*D**2q
         two = jnp.zeros(lead + (2 * q + 1,), U32).at[..., 2 * q].set(2)
         u, _ = sub_digits(two, _pad_to(t1, 2 * q + 1), digit_bits)
         prod = _mul_equalized(x, u, digit_bits)        # (..., 3q+2)
@@ -369,7 +387,8 @@ def _correct_qr(a_c, b_c, q, p, digit_bits):
 
 
 def divmod_recip_digits(a: jax.Array, b: jax.Array,
-                        digit_bits: int = DIGIT_BITS
+                        digit_bits: int = DIGIT_BITS,
+                        b_const: int | None = None
                         ) -> Tuple[jax.Array, jax.Array]:
     """Reciprocal-divide: (..., na) // (..., nb) -> ((..., na) q, (..., nb) r).
 
@@ -388,6 +407,13 @@ def divmod_recip_digits(a: jax.Array, b: jax.Array,
     nothing.  (The padding is a LOW-side digit shift of the normalized
     divisor, so the top bit stays at the array top and recip_digits'
     contract is unchanged.)
+
+    ``b_const`` declares the divisor a host-known constant (every lane
+    equal to it): the normalization shift and each Newton level's
+    divisor slice are then host-computable, so the reciprocal chain's
+    x*Bq multiplies and the q*b check multiply all hit the prepared-
+    operand NTT cache (the repeat-divide-by-a-fixed-modulus pattern of
+    RSA-CRT and base conversion).
     """
     a = jnp.asarray(a, U32)
     b = jnp.asarray(b, U32)
@@ -405,13 +431,22 @@ def divmod_recip_digits(a: jax.Array, b: jax.Array,
     a_s = shift_left_bits(_pad_to(a, na + nb), s, digit_bits)
     A = jnp.concatenate(
         [jnp.zeros(lead + (nw - nb,), U32), a_s], axis=-1)  # (..., na+nw)
-    v = recip_digits(b_pad, digit_bits)                # (..., nw+1)
+    b_pad_int = None
+    if b_const is not None:
+        b_int = int(b_const)
+        assert b_int >= 1
+        # the device-computed s equals this host value on every lane
+        s_int = nb * digit_bits - b_int.bit_length()
+        b_pad_int = (b_int << s_int) << ((nw - nb) * digit_bits)
+    v = recip_digits(b_pad, digit_bits,
+                     b_norm_int=b_pad_int)             # (..., nw+1)
 
     prod = _mul_equalized(A, v, digit_bits)            # (..., na+2nw+1)
     q = prod[..., 2 * nw: 2 * nw + na]                 # q_hat <= q < D**na
 
     wc = nw + 1                  # covers a (< D**na) AND b (< D**nb)
-    p = _mul_equalized(q, b, digit_bits)[..., :wc]     # q_hat*b <= a < D**na
+    p = _mul_equalized(q, b, digit_bits,
+                       b_const=b_const)[..., :wc]      # q_hat*b <= a < D**na
     q, r = _correct_qr(_pad_to(a, wc), _pad_to(b, wc), q, p, digit_bits)
     return q, r[..., :nb]
 
@@ -447,7 +482,8 @@ def select_div_method(nbits_a: int, nbits_b: int, batch: int = 1) -> str:
 
 
 def divmod_digits(a: jax.Array, b: jax.Array,
-                  digit_bits: int = DIGIT_BITS, method: str = "auto"
+                  digit_bits: int = DIGIT_BITS, method: str = "auto",
+                  b_const: int | None = None
                   ) -> Tuple[jax.Array, jax.Array]:
     """Exact (floor quotient, remainder) on normalized digit arrays.
 
@@ -455,7 +491,10 @@ def divmod_digits(a: jax.Array, b: jax.Array,
     ((..., na), (..., nb)).  Invariant: q*b + r == a and 0 <= r < b for
     every lane with b >= 1 (b == 0 lanes are undefined).  The Pallas
     schoolbook kernel only supports the native 16-bit digits; other
-    digit_bits always take the reciprocal path.
+    digit_bits always take the reciprocal path.  ``b_const`` declares
+    the divisor a host-known constant so the reciprocal path's fixed-
+    operand multiplies hit the prepared-operand NTT cache (the
+    schoolbook kernel ignores it).
     """
     if method == "auto":
         batch = 1
@@ -480,28 +519,31 @@ def divmod_digits(a: jax.Array, b: jax.Array,
             f"unknown division method {method!r}; choose from "
             f"{('auto',) + DIV_METHODS} (REPRO_DIV_BACKEND accepts the "
             f"same names, minus 'auto')")
-    return divmod_recip_digits(a, b, digit_bits)
+    return divmod_recip_digits(a, b, digit_bits, b_const=b_const)
 
 
 def divmod_limbs32(a_limbs: jax.Array, b_limbs: jax.Array,
-                   method: str = "auto") -> Tuple[jax.Array, jax.Array]:
+                   method: str = "auto",
+                   b_const: int | None = None) -> Tuple[jax.Array, jax.Array]:
     """(..., ma) // (..., mb) uint32 limbs -> ((..., ma) q, (..., mb) r).
 
     The GMP/OpenSSL-facing entry point (saturated radix in/out, digit
-    radix inside -- same packing contract as mul_limbs32).
+    radix inside -- same packing contract as mul_limbs32, including the
+    ``b_const`` fixed-divisor declaration).
     """
     ma = a_limbs.shape[-1]
     mb = b_limbs.shape[-1]
     a_d = split_digits(jnp.asarray(a_limbs, U32), DIGIT_BITS)
     b_d = split_digits(jnp.asarray(b_limbs, U32), DIGIT_BITS)
-    q_d, r_d = divmod_digits(a_d, b_d, DIGIT_BITS, method)
+    q_d, r_d = divmod_digits(a_d, b_d, DIGIT_BITS, method, b_const=b_const)
     return (join_digits(q_d, DIGIT_BITS, ma),
             join_digits(r_d, DIGIT_BITS, mb))
 
 
-@functools.partial(jax.jit, static_argnames=("method",))
-def divmod_jit(a_limbs: jax.Array, b_limbs: jax.Array, method: str = "auto"):
-    return divmod_limbs32(a_limbs, b_limbs, method)
+@functools.partial(jax.jit, static_argnames=("method", "b_const"))
+def divmod_jit(a_limbs: jax.Array, b_limbs: jax.Array, method: str = "auto",
+               b_const: int | None = None):
+    return divmod_limbs32(a_limbs, b_limbs, method, b_const=b_const)
 
 
 # ---------------------------------------------------------------------------
@@ -528,8 +570,10 @@ def divmod_const(x: jax.Array, c: int,
     v = jnp.asarray(L.int_to_limbs(v_int, m + 1, digit_bits))
     c_arr = jnp.asarray(L.int_to_limbs(c, nc, digit_bits))
 
-    q = _mul_equalized(x, v, digit_bits)[..., m: 2 * m]
-    p = _mul_equalized(q, c_arr, digit_bits)[..., : m + 1]
+    # both operands of both multiplies are host-known: they ride the
+    # prepared-operand NTT cache whenever the width dispatches to "ntt"
+    q = _mul_equalized(x, v, digit_bits, b_const=v_int)[..., m: 2 * m]
+    p = _mul_equalized(q, c_arr, digit_bits, b_const=c)[..., : m + 1]
     r, _ = sub_digits(_pad_to(x, m + 1), p, digit_bits)
     c_w = jnp.broadcast_to(_pad_to(c_arr, m + 1), r.shape)
     under = ge_digits(r, c_w, digit_bits)              # q_hat == q - 1

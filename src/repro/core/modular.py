@@ -34,9 +34,14 @@ Every public op takes ``backend`` (default: the module default, "jnp"):
   * ``barrett``   -- Barrett reduction (Mathemagix-style): precomputed
     mu = floor(B**2m / n), reduction = two pipeline multiplies + a
     bounded correction.  No Montgomery form, no parity restriction --
-    the ONLY backend that handles EVEN moduli.  Montgomery setup
-    rejects even n with a pointer here; mod_mul/mod_exp auto-route a
-    BarrettCtx to this backend.
+    handles EVEN moduli.  Montgomery setup rejects even n with a
+    pointer here; mod_mul/mod_exp auto-route a BarrettCtx to a Barrett
+    backend,
+  * ``barrett_fused`` -- the same Barrett schedule as ONE fused Pallas
+    launch per multiply / per FULL modexp ladder
+    (kernels/dot_modmul's Barrett block: mul -> truncated mu-multiply
+    -> q*n subtract -> two branch-free corrections, everything
+    VMEM-resident) -- even moduli get the single-launch ladder too.
 
 core/rsa.py, examples/rsa_crypto.py and benchmarks/bench_crypto.py all
 route through this one API, so backends can be compared head-to-head.
@@ -58,7 +63,7 @@ DIGIT_BITS = 16
 BASE = 1 << DIGIT_BITS
 MASK = jnp.uint32(BASE - 1)
 
-BACKENDS = ("reference", "jnp", "pallas", "barrett")
+BACKENDS = ("reference", "jnp", "pallas", "barrett", "barrett_fused")
 _DEFAULT_BACKEND = "jnp"
 
 
@@ -80,9 +85,14 @@ def _resolve_backend(backend: str | None, ctx=None) -> str:
         raise ValueError(f"unknown backend {backend!r}; choose from {BACKENDS}")
     # Even moduli carry a BarrettCtx; the Montgomery backends cannot
     # serve them, so auto-route to Barrett instead of failing deep in
-    # a kernel (the "reference" oracle handles any parity and is kept).
-    if backend in ("jnp", "pallas") and isinstance(ctx, BarrettCtx):
-        return "barrett"
+    # a kernel: the fused Barrett kernel for "pallas" (the user asked
+    # for a kernel), the jnp composition for "jnp".  The "reference"
+    # oracle handles any parity and is kept.
+    if isinstance(ctx, BarrettCtx):
+        if backend == "pallas":
+            return "barrett_fused"
+        if backend == "jnp":
+            return "barrett"
     return backend
 
 
@@ -97,7 +107,13 @@ class MontCtx:
     one_digits: np.ndarray       # R mod n     (Montgomery form of 1)
 
 
+@functools.lru_cache(maxsize=128)
 def mont_setup(n: int, nbits: int | None = None) -> MontCtx:
+    """Host-side Montgomery constants, memoized per (n, nbits): callers
+    like RSAKey.ctx rebuild the context on every access, so repeated
+    setups (including the R**2 mod n bigint work) must be cache hits.
+    The frozen dataclass and its arrays are shared -- treat as read-only.
+    """
     if n % 2 == 0 or n <= 2:
         raise ValueError(
             f"Montgomery arithmetic requires an odd modulus > 2, got "
@@ -125,11 +141,17 @@ class BarrettCtx:
     """
     m: int                       # digits
     n: int                       # python int modulus
+    mu: int                      # python int mu (host-known: the fixed
+    #                              operands feed the prepared-NTT cache)
     n_digits: np.ndarray         # (m,)
     mu_digits: np.ndarray        # (m + 2,): mu = floor(B**2m / n)
 
 
+@functools.lru_cache(maxsize=128)
 def barrett_setup(n: int, nbits: int | None = None) -> BarrettCtx:
+    """Memoized like mont_setup: _as_barrett promotes a MontCtx on EVERY
+    Barrett-path call, and the B**2m // n bigint division is exactly the
+    kind of host work that must not repeat per multiply."""
     if n < 2:
         raise ValueError("Barrett reduction requires a modulus >= 2")
     nbits = nbits or n.bit_length()
@@ -144,7 +166,7 @@ def barrett_setup(n: int, nbits: int | None = None) -> BarrettCtx:
             f"{(-(-n.bit_length() // DIGIT_BITS)) * DIGIT_BITS}")
     mu = (BASE ** (2 * m)) // n
     return BarrettCtx(
-        m=m, n=n,
+        m=m, n=n, mu=mu,
         n_digits=L.int_to_limbs(n, m, DIGIT_BITS),
         mu_digits=L.int_to_limbs(mu, m + 2, DIGIT_BITS),
     )
@@ -159,15 +181,10 @@ def mod_setup(n: int, nbits: int | None = None):
     return barrett_setup(n, nbits)
 
 
-@functools.lru_cache(maxsize=64)
-def _barrett_from_modulus(n: int, nbits: int) -> BarrettCtx:
-    return barrett_setup(n, nbits)
-
-
 def _as_barrett(ctx) -> BarrettCtx:
     if isinstance(ctx, BarrettCtx):
         return ctx
-    return _barrett_from_modulus(ctx.n, ctx.m * DIGIT_BITS)
+    return barrett_setup(ctx.n, ctx.m * DIGIT_BITS)   # memoized setup
 
 
 def _barrett_reduce(x: jax.Array, ctx: BarrettCtx) -> jax.Array:
@@ -188,8 +205,12 @@ def _barrett_reduce(x: jax.Array, ctx: BarrettCtx) -> jax.Array:
     n_dig = jnp.asarray(ctx.n_digits, U32)
 
     t = x[..., m - 1:]                                 # floor(x / B**(m-1))
-    q = DV._mul_equalized(t, mu, DIGIT_BITS)[..., m + 1: 2 * m + 2]
-    p = DV._mul_equalized(q, n_dig, DIGIT_BITS)[..., : 2 * m]   # q_hat*n <= x
+    # mu and n are host-known per context: both multiplies declare their
+    # fixed operand so huge moduli hit the prepared-operand NTT cache
+    q = DV._mul_equalized(t, mu, DIGIT_BITS,
+                          b_const=ctx.mu)[..., m + 1: 2 * m + 2]
+    p = DV._mul_equalized(q, n_dig, DIGIT_BITS,
+                          b_const=ctx.n)[..., : 2 * m]   # q_hat*n <= x
     r, _ = DV.sub_digits(x, p, DIGIT_BITS)
     r = r[..., : m + 1]                                # r < 3n < B**(m+1)
     n_w = jnp.broadcast_to(DV._pad_to(n_dig, m + 1), r.shape)
@@ -345,11 +366,11 @@ def mont_mul(a: jax.Array, b: jax.Array, ctx: MontCtx, lazy: bool = True,
     pallas kernel is lazy by construction; reference is exact host math.
     """
     backend = _resolve_backend(backend, ctx)
-    if backend == "barrett":
+    if backend in ("barrett", "barrett_fused"):
         raise ValueError(
             "mont_mul computes a*b*R^{-1} (Montgomery form); the Barrett "
-            "backend has no R -- use mod_mul / mod_exp, which dispatch "
-            "to barrett_mod_mul on plain residues")
+            "backends have no R -- use mod_mul / mod_exp, which dispatch "
+            "to Barrett multiplies on plain residues")
     if backend == "jnp":
         return _mont_mul_jnp(a, b, ctx, lazy)
     if backend == "pallas":
@@ -399,6 +420,16 @@ def mod_mul(a: jax.Array, b: jax.Array, ctx,
     backend = _resolve_backend(backend, ctx)
     if backend == "barrett":
         return barrett_mod_mul(a, b, ctx)
+    if backend == "barrett_fused":
+        from repro.kernels.dot_modmul import ops as _mops
+        bctx = _as_barrett(ctx)
+        a = jnp.asarray(a, U32)
+        b = jnp.asarray(b, U32)
+        shape = jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1]) + (bctx.m,)
+        a2, batch_shape = _flatten_batch(jnp.broadcast_to(a, shape), bctx.m)
+        b2, _ = _flatten_batch(jnp.broadcast_to(b, shape), bctx.m)
+        out = _mops.dot_barrett_mul(a2, b2, bctx)
+        return out.reshape(batch_shape + (bctx.m,))
     if backend == "reference" and isinstance(ctx, BarrettCtx):
         return _mod_mul_reference(a, b, ctx)    # no Montgomery form exists
     return from_mont(
@@ -511,10 +542,14 @@ def select_modexp_backend(nbits: int, batch: int = 1, ebits: int = 0,
     """Batch-aware modexp dispatch (configs/dot_bignum.MODEXP_DISPATCH),
     the modexp twin of core/mul.select_method.
 
-    The fused full-ladder Pallas kernel amortizes over the batch axis
-    only, so small batches (and tiny exponents, where the table build
-    dominates) take the jnp windowed composition; a BarrettCtx (even
-    modulus) always routes to the Barrett ladder.  A
+    The fused full-ladder kernels amortize over the batch axis only, so
+    tiny batches (and tiny exponents, where the table build dominates)
+    take the composition ladders -- but the floor is
+    ``packed_min_batch``, not a full tile: the kernel wrappers pad
+    sub-tile batches up to kernels/common/tiling.MIN_TILE and the
+    padded lanes ride the sublane axis for free.  A BarrettCtx (even
+    modulus) routes to the fused Barrett ladder in the same regime and
+    to the jnp Barrett composition below it.  A
     ``repro.api.configure(modexp_backend=...)`` override wins over
     everything (ops knob for A/B experiments without code changes); the
     REPRO_MODEXP_BACKEND env var is its deprecated alias."""
@@ -524,14 +559,16 @@ def select_modexp_backend(nbits: int, batch: int = 1, ebits: int = 0,
     override = _rc.resolve("modexp_backend", BACKENDS, "modexp backend")
     if override:
         return _resolve_backend(override, ctx)
+    fused_ok = (batch >= cfg.packed_min_batch
+                and nbits <= cfg.fused_max_bits
+                and ebits >= cfg.fused_min_exp_bits)
     if isinstance(ctx, BarrettCtx):
-        return "barrett"
+        return "barrett_fused" if fused_ok else "barrett"
     if _DEFAULT_BACKEND != "jnp":
         # an explicit set_default_backend() choice wins over the
         # size-based dispatch (force "jnp" via backend= or the env var)
         return _DEFAULT_BACKEND
-    if (batch >= cfg.fused_min_batch and nbits <= cfg.fused_max_bits
-            and ebits >= cfg.fused_min_exp_bits):
+    if fused_ok:
         return "pallas"
     return "jnp"
 
@@ -565,6 +602,19 @@ def mod_exp(base: jax.Array, exp_bits: jax.Array, ctx,
         backend = _resolve_backend(backend, ctx)
     if backend == "barrett":
         return _barrett_mod_exp(base, exp_bits, ctx, window)
+    if backend == "barrett_fused":
+        from repro.kernels.dot_modmul import ops as _mops
+        bctx = _as_barrett(ctx)
+        base = jnp.asarray(base, U32)
+        shape = jnp.broadcast_shapes(
+            base.shape[:-1], eb.shape[:-1]) + (bctx.m,)
+        b2, batch_shape = _flatten_batch(
+            jnp.broadcast_to(base, shape), bctx.m)
+        if eb.ndim > 1:
+            eb = jnp.broadcast_to(
+                eb, batch_shape + (eb.shape[-1],)).reshape(-1, eb.shape[-1])
+        out = _mops.dot_barrett_mod_exp(b2, eb, bctx, window=window)
+        return out.reshape(batch_shape + (bctx.m,))
     if backend == "jnp":
         return _mod_exp_jnp(base, exp_bits, ctx, lazy, window)
     if backend == "pallas":

@@ -417,8 +417,16 @@ def _flatten_leading(x: jax.Array):
 
 
 def mul_limbs32(a_limbs: jax.Array, b_limbs: jax.Array,
-                method: str = "auto") -> jax.Array:
-    """(..., m) uint32 limbs x2 -> (..., 2m) uint32 limbs (full product)."""
+                method: str = "auto",
+                b_const: int | None = None) -> jax.Array:
+    """(..., m) uint32 limbs x2 -> (..., 2m) uint32 limbs (full product).
+
+    ``b_const``, when given, asserts that b_limbs holds the HOST-KNOWN
+    value b_const in every lane; the NTT tier then multiplies against
+    the prepared-operand cache (one forward transform per launch instead
+    of two -- kernels/ntt_mul.prepared_operand).  Other methods ignore
+    it, so callers can pass it unconditionally for any fixed operand.
+    """
     m = a_limbs.shape[-1]
     if method == "auto":
         batch = 1
@@ -439,7 +447,10 @@ def mul_limbs32(a_limbs: jax.Array, b_limbs: jax.Array,
             out = _k.mxu_mul_limbs32(a2, b2)
         elif method == "ntt":
             from repro.kernels.ntt_mul import ops as _k
-            out = _k.ntt_mul_limbs32(a2, b2)
+            if b_const is not None and _k.operand_cache_capacity() > 0:
+                out = _k.ntt_mul_limbs32_prepared(a2, b_const)
+            else:
+                out = _k.ntt_mul_limbs32(a2, b2)
         else:
             from repro.kernels.kara_mul import ops as _k
             out = _k.kara_mul_limbs32(a2, b2)

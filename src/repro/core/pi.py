@@ -97,8 +97,11 @@ def pi_decimal_digits(n_decimal: int, guard_digits: int = 4):
     nt = max(1, -(-ten_n.bit_length() // DIGIT_BITS))
     ten_arr = jnp.asarray(L.int_to_limbs(ten_n, nt, DIGIT_BITS))
     w = max(m, nt)
+    # 10**n is host-known: at pi sizes this multiply rides the NTT tier,
+    # where the prepared-operand cache skips the constant's transform
     scaled = mul_digits_via_pipeline(
-        jnp.pad(frac, (0, w - m)), jnp.pad(ten_arr, (0, w - nt)))
+        jnp.pad(frac, (0, w - m)), jnp.pad(ten_arr, (0, w - nt)),
+        b_const=ten_n)
     y = scaled[..., m: m + nt]                     # floor(frac*10**n / B**m)
     return int_part, to_decimal_digits(y, n_decimal)
 

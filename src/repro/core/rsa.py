@@ -154,8 +154,8 @@ def decrypt_crt(c_digits: jax.Array, key: RSAKey,
     dq_bits = jnp.asarray(M.exp_bits_msb(key.d % (q - 1), q.bit_length()))
     p_dig = jnp.asarray(L.int_to_limbs(p, mp, DIGIT_BITS))
     q_dig = jnp.asarray(L.int_to_limbs(q, mq, DIGIT_BITS))
-    qinv_dig = jnp.asarray(
-        L.int_to_limbs(pow(q, -1, p), mp, DIGIT_BITS))
+    qinv = pow(q, -1, p)
+    qinv_dig = jnp.asarray(L.int_to_limbs(qinv, mp, DIGIT_BITS))
 
     c = jnp.asarray(c_digits, U32)
     c_p = DV.divmod_const(c, p)[1][..., :mp]                # c mod p
@@ -170,9 +170,13 @@ def decrypt_crt(c_digits: jax.Array, key: RSAKey,
     t, _ = DV.sub_digits(t, DV._pad_to(m2_p, w))            # < 2p
     over = DV.ge_digits(t, DV._pad_to(p_dig, w))
     t = DV.sub_digits(t, DV._pad_to(p_dig, w) * over[..., None])[0]
-    prod = DV._mul_equalized(t[..., :mp], qinv_dig)         # (.., 2mp)
+    # q^-1 and q are host key constants: at huge key sizes these Garner
+    # cross-products ride the prepared-operand NTT cache like the
+    # divmod_const reductions above them
+    prod = DV._mul_equalized(t[..., :mp], qinv_dig,
+                             b_const=qinv)                  # (.., 2mp)
     h = DV.divmod_const(prod, p)[1][..., :mp]               # (.., mp)
-    hq = DV._mul_equalized(h, q_dig)[..., :mn]              # h*q < n
+    hq = DV._mul_equalized(h, q_dig, b_const=q)[..., :mn]   # h*q < n
     return DV.add_digits(DV._pad_to(m2, mn), hq)
 
 

@@ -28,6 +28,7 @@ import jax
 from repro.kernels.common import tiling
 
 _CACHE: dict = {}
+_COUNTERS = {"hits": 0, "misses": 0}
 
 
 def enabled() -> bool:
@@ -39,11 +40,20 @@ def enabled() -> bool:
 
 def clear_cache() -> None:
     _CACHE.clear()
+    for k in _COUNTERS:
+        _COUNTERS[k] = 0
 
 
 def cache_summary() -> dict:
     """{(op, m, batch, digit_bits): best_tile} for docs/benchmark dumps."""
     return dict(_CACHE)
+
+
+def cache_stats() -> dict:
+    """Hit/miss counters + entry count (repro.api.cache_stats feed).
+    Hits/misses only tick when autotuning is enabled (a disabled call
+    answers from the heuristic, touching no cache)."""
+    return dict(_COUNTERS, entries=len(_CACHE))
 
 
 def candidate_tiles(heuristic: int, batch: int,
@@ -82,7 +92,9 @@ def pick_tile(op: str, key: tuple, heuristic: int, batch: int,
         pass
     full_key = (op,) + tuple(key)
     if full_key in _CACHE:
+        _COUNTERS["hits"] += 1
         return _CACHE[full_key]
+    _COUNTERS["misses"] += 1
     best, best_dt = heuristic, float("inf")
     for tb in candidate_tiles(heuristic, batch, max_tile=max_tile):
         try:

@@ -231,6 +231,179 @@ def make_ladder_call(batch_tile: int, m: int, grid: int, n0p: int,
     )
 
 
+# ---------------------------------------------------------------------------
+# fused Barrett multiply (the even-modulus twin of the CIOS block)
+# ---------------------------------------------------------------------------
+
+# The Barrett block's full products keep ~2m-wide column temps live on
+# top of the CIOS-style working set, so its tile budget counts them.
+BARRETT_LIVE_U32_ARRAYS = 20
+
+
+def full_mul_columns(a, b):
+    """Lazy full product on blocks: a (TB, ma) x b (TB|1, mb) ->
+    (TB, ma+mb) deferred-carry columns, each digit < 2*ma*2**16.
+
+    The schoolbook column accumulation of kernels/dot_mul, restated as a
+    lax.fori_loop over a's digits so the fused Barrett ladder (three of
+    these per modular multiply, ~nbits*(1+1/w) multiplies per launch)
+    traces one body instead of inlining ma iterations everywhere."""
+    tb, ma = a.shape
+    mb = b.shape[1]
+    zeros1 = jnp.zeros((tb, 1), U32)
+
+    def body(i, acc):
+        ai = jax.lax.dynamic_slice_in_dim(a, i, 1, axis=1)   # (TB, 1)
+        prod = ai * b                             # exact uint32 products
+        contrib = (jnp.concatenate([prod & DMASK, zeros1], axis=1)
+                   + jnp.concatenate([zeros1, prod >> DBITS], axis=1))
+        cur = jax.lax.dynamic_slice(acc, (0, i), (tb, mb + 1))
+        return jax.lax.dynamic_update_slice(acc, cur + contrib, (0, i))
+
+    return jax.lax.fori_loop(0, ma, body, jnp.zeros((tb, ma + mb), U32))
+
+
+def cond_sub_ge(r, n):
+    """Width-preserving branch-free conditional subtract: r if r < n
+    else r - n, for r (TB, mw) normalized and n (1, mw).  Same radix-
+    complement trick as cond_subtract, keeping all mw digits (Barrett's
+    r < 3n needs m+1 digits until the final correction lands)."""
+    tb, mw = r.shape
+    s = (r + (DMASK - n)).at[:, 0:1].add(1)       # lazy, <= 2**17 + 1
+    ext = jnp.concatenate([s, jnp.zeros((tb, 1), U32)], axis=1)
+    sn = normalize_static(ext, bound=1 << 17)     # (TB, mw+1)
+    ge = sn[:, mw:mw + 1]                         # carry out: 1 iff r >= n
+    return jnp.where(ge == 1, sn[:, :mw], r)
+
+
+def barrett_mul_block(a, b, n, mu):
+    """Full Barrett modular product on (TB, m) blocks: a*b mod n with
+    NO Montgomery form -- the only in-kernel multiply that serves even
+    moduli.  Mirrors core/modular._barrett_reduce digit for digit:
+
+      x = a*b                                  (full product, 2m digits)
+      t = floor(x / B**(m-1))                  (static slice)
+      q_hat = floor(t * mu / B**(m+1))         (truncated mu-multiply)
+      r = x - q_hat*n  mod B**(m+1)            (radix-complement, exact
+                                                since 0 <= x - q_hat*n
+                                                < 3n < B**(m+1))
+      two branch-free conditional subtracts    (q_hat >= q - 2)
+
+    n: (1, m) and mu: (1, m+2) ride in as runtime rows (NOT baked), so
+    one compiled kernel serves every same-width modulus."""
+    tb, m = a.shape
+    x = normalize_static(full_mul_columns(a, b),
+                         bound=(2 * m) << 16)     # (TB, 2m), a*b exact
+    t = x[:, m - 1:]                              # (TB, m+1)
+    q_full = normalize_static(full_mul_columns(t, mu),
+                              bound=(2 * (m + 1)) << 16)
+    q = q_full[:, m + 1:2 * m + 2]                # (TB, m+1) q_hat
+    p = normalize_static(full_mul_columns(q, n),
+                         bound=(2 * (m + 1)) << 16)  # q_hat*n <= x < B**2m
+    # r = x - p on m+1 digits: exact mod B**(m+1) because 0 <= x-p < 3n
+    s = (x[:, :m + 1] + (DMASK - p[:, :m + 1])).at[:, 0:1].add(1)
+    r = normalize_static(s, bound=1 << 17)        # carry past top drops
+    n_ext = jnp.concatenate([n, jnp.zeros((1, 1), U32)], axis=1)
+    r = cond_sub_ge(r, n_ext)
+    r = cond_sub_ge(r, n_ext)
+    return r[:, :m]
+
+
+def make_barrett_kernel(m: int):
+    """Single fused Barrett multiply kernel body (modulus width baked;
+    the modulus itself arrives as runtime rows)."""
+
+    def barrett_mul_kernel(a_ref, b_ref, n_ref, mu_ref, out_ref):
+        out_ref[...] = barrett_mul_block(
+            a_ref[...], b_ref[...], n_ref[...], mu_ref[...])
+
+    return barrett_mul_kernel
+
+
+def barrett_live_arrays(window: int) -> int:
+    """Live (TB, ~m) uint32 arrays in the fused Barrett ladder: the
+    2**w-row power table plus the Barrett block's double-width temps."""
+    return (1 << window) + BARRETT_LIVE_U32_ARRAYS
+
+
+def make_barrett_ladder_kernel(m: int, window: int, nwin: int):
+    """Fused full-ladder windowed modexp on plain residues via Barrett
+    reduction: same one-launch schedule as make_ladder_kernel (power
+    table build, w squarings + one-hot select per window) minus the
+    Montgomery entry/exit -- Barrett's identity is the literal digit 1,
+    so even moduli get the single-launch ladder too."""
+    nt = 1 << window
+
+    def ladder_kernel(base_ref, win_ref, n_ref, mu_ref, out_ref):
+        base = base_ref[...]                      # (TB, m) residues < n
+        wins = win_ref[...]                       # (TB, nwin) window values
+        n = n_ref[...]                            # (1, m) modulus digits
+        mu = mu_ref[...]                          # (1, m+2) mu digits
+        tb = base.shape[0]
+
+        def mm(x, y):
+            return barrett_mul_block(x, y, n, mu)
+
+        one = (jax.lax.broadcasted_iota(U32, (1, m), 1) == 0).astype(U32)
+        table = [jnp.broadcast_to(one, base.shape), base]
+        for _ in range(2, nt):
+            table.append(mm(table[-1], base))
+        tab = jnp.stack(table[:nt])               # (2**w, TB, m) in VMEM
+        iota = jax.lax.broadcasted_iota(U32, (nt, tb), 0)
+
+        def select(j):
+            d = jax.lax.dynamic_slice_in_dim(wins, j, 1, axis=1)  # (TB, 1)
+            onehot = (iota == d.reshape(1, tb)).astype(U32)       # (2**w, TB)
+            return jnp.sum(tab * onehot[:, :, None], axis=0)      # (TB, m)
+
+        def win_step(j, res):
+            for _ in range(window):
+                res = mm(res, res)
+            return mm(res, select(j))
+
+        out_ref[...] = jax.lax.fori_loop(1, nwin, win_step, select(0))
+
+    return ladder_kernel
+
+
+@functools.lru_cache(maxsize=64)
+def make_barrett_call(batch_tile: int, m: int, grid: int, interpret: bool):
+    """pallas_call for the fused Barrett multiply.  Inputs: a, b
+    (grid*TB, m) digit arrays plus (1, m) modulus and (1, m+2) mu rows
+    broadcast to every program (runtime operands: the cache key is
+    geometry only, one compilation per width)."""
+    return pl.pallas_call(
+        make_barrett_kernel(m),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((batch_tile, m), lambda i: (i, 0)),
+                  pl.BlockSpec((batch_tile, m), lambda i: (i, 0)),
+                  pl.BlockSpec((1, m), lambda i: (0, 0)),
+                  pl.BlockSpec((1, m + 2), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((batch_tile, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid * batch_tile, m), U32),
+        interpret=interpret,
+    )
+
+
+@functools.lru_cache(maxsize=64)
+def make_barrett_ladder_call(batch_tile: int, m: int, grid: int,
+                             window: int, nwin: int, interpret: bool):
+    """pallas_call for the fused Barrett full-ladder windowed modexp.
+    Inputs: base (grid*TB, m), window values (grid*TB, nwin), and the
+    (1, m) / (1, m+2) modulus and mu rows."""
+    return pl.pallas_call(
+        make_barrett_ladder_kernel(m, window, nwin),
+        grid=(grid,),
+        in_specs=[pl.BlockSpec((batch_tile, m), lambda i: (i, 0)),
+                  pl.BlockSpec((batch_tile, nwin), lambda i: (i, 0)),
+                  pl.BlockSpec((1, m), lambda i: (0, 0)),
+                  pl.BlockSpec((1, m + 2), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((batch_tile, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid * batch_tile, m), U32),
+        interpret=interpret,
+    )
+
+
 @functools.lru_cache(maxsize=64)
 def make_call(batch_tile: int, m: int, grid: int, n0p: int,
               interpret: bool):

@@ -87,6 +87,81 @@ def dot_mont_mul(a, b, ctx, interpret=None):
     return _mont_mul_call(a, b, n_row, tb, n0p, interpret)
 
 
+@functools.partial(jax.jit, static_argnames=("tb", "interpret"))
+def _barrett_mul_call(a, b, n_row, mu_row, tb: int, interpret: bool):
+    batch, m = a.shape
+    pad = (-batch) % tb
+    if pad:
+        a = jnp.pad(a, ((0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, pad), (0, 0)))
+    grid = a.shape[0] // tb
+    out = K.make_barrett_call(tb, m, grid, interpret)(a, b, n_row, mu_row)
+    return out[:batch]
+
+
+@functools.partial(jax.jit, static_argnames=("tb", "window", "interpret"))
+def _barrett_ladder_call(base, wins, n_row, mu_row, tb: int, window: int,
+                         interpret: bool):
+    batch, m = base.shape
+    pad = (-batch) % tb
+    if pad:
+        base = jnp.pad(base, ((0, pad), (0, 0)))
+        # padded lanes exponentiate to 0**0 = 1 and are trimmed below
+        wins = jnp.pad(wins, ((0, pad), (0, 0)))
+    grid = base.shape[0] // tb
+    out = K.make_barrett_ladder_call(tb, m, grid, window, wins.shape[-1],
+                                     interpret)(base, wins, n_row, mu_row)
+    return out[:batch]
+
+
+def dot_barrett_mul(a, b, ctx, interpret=None):
+    """(batch, m) digit arrays x2 -> (batch, m) of a*b mod n via the
+    fused Barrett kernel (no Montgomery form; any modulus parity).
+
+    ``ctx`` is duck-typed on ``m / n_digits / mu_digits``
+    (core.modular.BarrettCtx); n and mu ride in as runtime rows, so one
+    compiled kernel serves every same-width modulus."""
+    assert ctx.m <= MAX_DIGITS, "lazy digits overflow uint32 beyond 2**13"
+    a = jnp.asarray(a, U32)
+    b = jnp.asarray(b, U32)
+    n_row = jnp.asarray(ctx.n_digits, U32)[None, :]
+    mu_row = jnp.asarray(ctx.mu_digits, U32)[None, :]
+    interpret = _auto_interpret(interpret)
+    batch, m = a.shape
+    tb = autotune.pick_tile(
+        "dot_barrett_mul", (m, batch, 16, interpret),
+        tiling.batch_tile(
+            m, batch, budget=tiling.budget_words(K.BARRETT_LIVE_U32_ARRAYS),
+            max_tile=K.MAX_TILE),
+        batch,
+        run=lambda t: _barrett_mul_call(a, b, n_row, mu_row, t, interpret),
+        max_tile=K.MAX_TILE)
+    return _barrett_mul_call(a, b, n_row, mu_row, tb, interpret)
+
+
+def dot_barrett_mod_exp(base, exp_bits, ctx, window=None, interpret=None):
+    """Fused full-ladder windowed modexp via Barrett reduction: the even-
+    modulus twin of dot_mod_exp (same one-launch constant-time schedule,
+    no Montgomery entry/exit).  ``ctx`` duck-typed as dot_barrett_mul."""
+    assert ctx.m <= MAX_DIGITS, "lazy digits overflow uint32 beyond 2**13"
+    base = jnp.asarray(base, U32)
+    eb = jnp.asarray(exp_bits, U32)
+    if eb.ndim == 1:
+        eb = jnp.broadcast_to(eb, (base.shape[0], eb.shape[-1]))
+    w = int(window if window is not None
+            else pick_modexp_window(eb.shape[-1]))
+    wins = exponent_windows(eb, w)
+    n_row = jnp.asarray(ctx.n_digits, U32)[None, :]
+    mu_row = jnp.asarray(ctx.mu_digits, U32)[None, :]
+    interpret = _auto_interpret(interpret)
+    batch, m = base.shape
+    # heuristic tile only, for the same reason as dot_mod_exp
+    tb = tiling.batch_tile(
+        m, batch, budget=tiling.budget_words(K.barrett_live_arrays(w)),
+        max_tile=K.MAX_TILE)
+    return _barrett_ladder_call(base, wins, n_row, mu_row, tb, w, interpret)
+
+
 def dot_mod_exp(base, exp_bits, ctx, window=None, interpret=None):
     """(batch, m) digits ** exp -> (batch, m) digits of base**e mod n,
     the whole windowed ladder fused into ONE kernel launch.

@@ -172,6 +172,58 @@ def make_ntt_mul_kernel(p: int, pinv: int, scale: int):
     return ntt_mul_kernel
 
 
+def make_ntt_mul_prepared_kernel(p: int, pinv: int, scale: int):
+    """Fused body with operand b already transformed: NTT(a), pointwise
+    against the cached forward residue row, inverse -- one launch that
+    skips one of the two forward transforms (~1/3 of transform work).
+
+    ``fb_ref`` is a (1, N) NORMAL-domain forward transform of the fixed
+    operand (ops.prepared_operand); the pointwise Montgomery product
+    broadcasts it over the batch tile and picks up the same stray R**-1
+    as the two-transform kernel, cancelled by the inverse scale.
+    """
+
+    def ntt_mul_prepared_kernel(a_ref, fb_ref, wf_ref, wi_ref, out_ref):
+        wf = wf_ref[...]
+        wi = wi_ref[...]
+        fa = ntt_forward(a_ref[...], wf, p, pinv)
+        c = mont_mul(fa, fb_ref[...], p, pinv)   # (TB,N)x(1,N) broadcast
+        out_ref[...] = ntt_inverse(c, wi, p, pinv, scale)
+
+    return ntt_mul_prepared_kernel
+
+
+def _derived_constants(n: int, p: int):
+    assert n & (n - 1) == 0, "transform length must be a power of two"
+    order = (p - 1) & -(p - 1)
+    assert n <= order, f"prime {p} has 2-adic order {order} < N={n}"
+    pinv = (-pow(p, -1, 1 << R_BITS)) % (1 << R_BITS)
+    scale = pow(n, -1, p) * pow(2, 2 * R_BITS, p) % p
+    return pinv, scale
+
+
+@functools.lru_cache(maxsize=64)
+def make_prepared_call(batch_tile: int, n: int, grid: int, p: int,
+                       interpret: bool):
+    """pallas_call for one prime with a prepared operand: (batch, N) a,
+    (1, N) forward residue of b, twiddles -> residues."""
+    pinv, scale = _derived_constants(n, p)
+    stages = n.bit_length() - 1
+    return pl.pallas_call(
+        make_ntt_mul_prepared_kernel(p, pinv, scale),
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((batch_tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, n), lambda i: (0, 0)),
+            pl.BlockSpec((stages, n // 2), lambda i: (0, 0)),
+            pl.BlockSpec((stages, n // 2), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch_tile, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((grid * batch_tile, n), U32),
+        interpret=interpret,
+    )
+
+
 @functools.lru_cache(maxsize=64)
 def make_call(batch_tile: int, n: int, grid: int, p: int, interpret: bool):
     """pallas_call for one prime: (batch, N) x2 + twiddles -> residues.
@@ -180,11 +232,7 @@ def make_call(batch_tile: int, n: int, grid: int, p: int, interpret: bool):
     ints (scalar closures are kernel-safe); the twiddle tables are
     runtime inputs mapped whole into every program (VMEM-resident).
     """
-    assert n & (n - 1) == 0, "transform length must be a power of two"
-    order = (p - 1) & -(p - 1)
-    assert n <= order, f"prime {p} has 2-adic order {order} < N={n}"
-    pinv = (-pow(p, -1, 1 << R_BITS)) % (1 << R_BITS)
-    scale = pow(n, -1, p) * pow(2, 2 * R_BITS, p) % p
+    pinv, scale = _derived_constants(n, p)
     stages = n.bit_length() - 1
     return pl.pallas_call(
         make_ntt_mul_kernel(p, pinv, scale),

@@ -26,6 +26,7 @@ single static carry resolve.
 """
 from __future__ import annotations
 
+import collections
 import functools
 
 import jax
@@ -104,6 +105,102 @@ def twiddle_tables(p: int, n: int) -> tuple[np.ndarray, np.ndarray]:
                 tbl[s, j] = cur * R % p
                 cur = cur * wm % p
     return wf, wi
+
+
+# ---------------------------------------------------------------------------
+# Prepared operands: the forward NTT of a FIXED operand is a
+# precomputation exactly like twiddles (van der Hoeven & Lecerf), so the
+# repeat-multiply-by-a-constant consumers (Newton reciprocal levels,
+# divmod_const, Barrett's mu and n, base-conversion chunk constants)
+# never pay for the same transform twice.  Cached host-side in a bounded
+# LRU keyed by (value, prime set, N) with hit/miss/eviction counters
+# (repro.api.cache_stats); capacity via configure(ntt_cache_entries=...),
+# 0 disables the prepared path entirely (the A/B switch benchmarks use).
+# ---------------------------------------------------------------------------
+
+DEFAULT_CACHE_ENTRIES = 64
+
+_prepared_cache: "collections.OrderedDict[tuple, tuple]" = \
+    collections.OrderedDict()
+_prepared_counters = {"hits": 0, "misses": 0, "evictions": 0}
+
+
+def operand_cache_capacity() -> int:
+    """LRU entry cap for the prepared-operand cache (0: path disabled)."""
+    from repro import config as _rc
+    cap = _rc.resolve("ntt_cache_entries")
+    if cap is None:
+        return DEFAULT_CACHE_ENTRIES
+    cap = int(cap)
+    if cap < 0:
+        raise ValueError(f"ntt_cache_entries must be >= 0, got {cap}")
+    return cap
+
+
+def operand_cache_stats() -> dict:
+    """Counters + occupancy for repro.api.cache_stats()."""
+    return dict(_prepared_counters,
+                entries=len(_prepared_cache),
+                capacity=operand_cache_capacity())
+
+
+def clear_operand_cache() -> None:
+    _prepared_cache.clear()
+    for k in _prepared_counters:
+        _prepared_counters[k] = 0
+
+
+def _host_ntt_forward(digits: np.ndarray, p: int) -> np.ndarray:
+    """Exact uint64 replica of the kernel's DIF forward transform for one
+    (N,) natural-order digit vector mod p (output order bit-reversed,
+    NORMAL domain -- matching what ntt_forward leaves for the pointwise
+    product).  p < 2**30, so every (u + p - v) % p * tw product stays
+    below 2**60: exact in uint64."""
+    n = digits.shape[-1]
+    x = digits.astype(np.uint64) % p
+    w = pow(K.GENERATOR, (p - 1) // n, p)
+    for s in range(n.bit_length() - 1):
+        ln = n >> (s + 1)
+        wm = pow(w, n // (2 * ln), p)
+        tw = np.empty((ln,), np.uint64)
+        cur = 1
+        for j in range(ln):
+            tw[j] = cur
+            cur = cur * wm % p
+        y = x.reshape(-1, 2, ln)
+        u, v = y[:, 0, :], y[:, 1, :]
+        x = np.stack([(u + v) % p, (u + p - v) % p * tw % p],
+                     axis=1).reshape(n)
+    return x.astype(np.uint32)
+
+
+def prepared_operand(value: int, n: int, nprimes: int) -> tuple:
+    """Per-prime (1, N) forward-NTT rows of a host-known operand value,
+    served from the bounded LRU (key: (value, prime set, N) -- same
+    value at a different transform length or prime count is a distinct
+    entry, so two moduli never share a prepared operand)."""
+    key = (value, nprimes, n)
+    hit = _prepared_cache.get(key)
+    if hit is not None:
+        _prepared_cache.move_to_end(key)
+        _prepared_counters["hits"] += 1
+        return hit
+    _prepared_counters["misses"] += 1
+    digits = np.array([(value >> (DIGIT_BITS * k)) & 0xFFFF
+                       for k in range(n)], np.uint32)
+    # the rows MUST be concrete arrays: a caller may hit this miss path
+    # while inside an outer jit trace, and without the eager guard the
+    # [None, :] below would stage and poison the process-global cache
+    # with that trace's tracers (crashing every later caller)
+    with jax.ensure_compile_time_eval():
+        rows = tuple(jnp.asarray(_host_ntt_forward(digits, p)[None, :])
+                     for p in K.PRIMES[:nprimes])
+    _prepared_cache[key] = rows
+    cap = operand_cache_capacity()
+    while len(_prepared_cache) > max(1, cap):
+        _prepared_cache.popitem(last=False)
+        _prepared_counters["evictions"] += 1
+    return rows
 
 
 # ---------------------------------------------------------------------------
@@ -241,4 +338,59 @@ def ntt_mul_limbs32(a_limbs, b_limbs, nprimes: int | None = None,
     a_d = coremul.split_digits(jnp.asarray(a_limbs, U32), DIGIT_BITS)
     b_d = coremul.split_digits(jnp.asarray(b_limbs, U32), DIGIT_BITS)
     p_d = ntt_mul_digits(a_d, b_d, nprimes, interpret)
+    return coremul.join_digits(p_d, DIGIT_BITS, 2 * m)
+
+
+@functools.partial(jax.jit, static_argnames=("nprimes", "tb", "interpret"))
+def _call_prepared(a_d, fb_rows, twiddles, nprimes: int, tb: int,
+                   interpret: bool):
+    batch, nd = a_d.shape
+    n = next_pow2(2 * nd)
+    pad_b = (-batch) % tb
+    a_p = jnp.pad(a_d, ((0, pad_b), (0, n - nd)))
+    grid = a_p.shape[0] // tb
+    residues = []
+    for p, fb, (wf, wi) in zip(K.PRIMES[:nprimes], fb_rows, twiddles):
+        r = K.make_prepared_call(tb, n, grid, p, interpret)(a_p, fb, wf, wi)
+        residues.append(r[:batch])
+    return crt_combine(residues, 2 * nd)
+
+
+def ntt_mul_digits_prepared(a_digits, b_value: int,
+                            nprimes: int | None = None, interpret=None):
+    """(batch, nd) digits x a HOST-KNOWN operand value -> (batch, 2*nd)
+    full-product digits, with b's forward transforms served from the
+    prepared-operand cache -- each launch runs ONE forward transform
+    instead of two.  ``b_value`` must equal the value the caller would
+    otherwise pass as a (nd,) digit array (< 2**(16*nd)); the prepared
+    rows are runtime (1, N) inputs, so repeat calls share one trace."""
+    a = jnp.asarray(a_digits, U32)
+    batch, nd = a.shape
+    b_value = int(b_value)
+    assert 0 <= b_value < 1 << (DIGIT_BITS * nd), \
+        "prepared operand wider than the digit array it replaces"
+    nprimes = _resolve_nprimes(nd, nprimes)
+    interpret = _auto_interpret(interpret)
+    n = next_pow2(2 * nd)
+    twiddles = tuple(
+        tuple(jnp.asarray(t) for t in twiddle_tables(p, n))
+        for p in K.PRIMES[:nprimes])
+    fb_rows = prepared_operand(b_value, n, nprimes)
+    tb = autotune.pick_tile(
+        "ntt_mul_prepared", (n, batch, DIGIT_BITS, nprimes, interpret),
+        _heuristic_tile(n, batch), batch,
+        run=lambda t: _call_prepared(a, fb_rows, twiddles, nprimes, t,
+                                     interpret),
+        max_tile=K.MAX_TILE)
+    return _call_prepared(a, fb_rows, twiddles, nprimes, tb, interpret)
+
+
+def ntt_mul_limbs32_prepared(a_limbs, b_value: int,
+                             nprimes: int | None = None, interpret=None):
+    """32-bit limb twin of ntt_mul_digits_prepared: (batch, m) limbs x a
+    host-known value < 2**(32m) -> (batch, 2m) limbs."""
+    from repro.core import mul as coremul
+    m = a_limbs.shape[-1]
+    a_d = coremul.split_digits(jnp.asarray(a_limbs, U32), DIGIT_BITS)
+    p_d = ntt_mul_digits_prepared(a_d, b_value, nprimes, interpret)
     return coremul.join_digits(p_d, DIGIT_BITS, 2 * m)

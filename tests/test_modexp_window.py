@@ -29,7 +29,7 @@ from repro.kernels.common.windows import exponent_windows
 
 RNG = np.random.default_rng(17)
 
-DEVICE_BACKENDS = ("jnp", "pallas", "barrett")
+DEVICE_BACKENDS = ("jnp", "pallas", "barrett", "barrett_fused")
 
 
 def _modulus(nbits, parity="odd"):
@@ -321,17 +321,25 @@ def test_identical_hlo_for_different_exponents(backend):
 def test_select_modexp_backend_batch_aware():
     cfg = MODEXP_DISPATCH
     big = cfg.fused_min_batch
+    small = cfg.packed_min_batch
     assert M.select_modexp_backend(512, batch=big, ebits=512) == "pallas"
-    assert M.select_modexp_backend(512, batch=big - 1, ebits=512) == "jnp"
+    # sub-tile batches still take the fused ladder: the kernel wrappers
+    # pad the batch up to the tile minimum (sub-batch lane packing), so
+    # the floor is packed_min_batch, not a full tile
+    assert M.select_modexp_backend(512, batch=small, ebits=512) == "pallas"
+    assert M.select_modexp_backend(512, batch=small - 1, ebits=512) == "jnp"
     # tiny exponents: table build dominates, kernel launch can't pay
     assert M.select_modexp_backend(
         512, batch=big, ebits=cfg.fused_min_exp_bits - 1) == "jnp"
     # beyond the kernel's VMEM bound
     assert M.select_modexp_backend(
         cfg.fused_max_bits + 16, batch=big, ebits=512) == "jnp"
-    # even modulus always routes to Barrett
+    # even modulus: the fused Barrett ladder in the same packed regime,
+    # the jnp Barrett composition below it
     bctx = M.barrett_setup(_modulus(128, "even"), 128)
     assert M.select_modexp_backend(128, batch=big, ebits=128,
+                                   ctx=bctx) == "barrett_fused"
+    assert M.select_modexp_backend(128, batch=small - 1, ebits=128,
                                    ctx=bctx) == "barrett"
 
 

@@ -1,0 +1,202 @@
+"""Prepared-operand NTT cache: bit-identity with the plain path, LRU
+bookkeeping, and the memoized modular setups that feed it.
+
+The prepared path (kernels/ntt_mul.ntt_mul_digits_prepared) skips one of
+the two forward transforms by caching the per-prime forward NTT of a
+host-known constant; these tests pin that the shortcut is BIT-IDENTICAL
+to the plain kernel (same butterflies, same Montgomery domain, so
+equality is exact, not approximate), that the LRU keying/eviction is
+sound, and that a disabled cache (capacity 0) routes callers back to the
+plain path untouched.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.api as api
+from repro.core import div as DV
+from repro.core import limbs as L
+from repro.core import modular as M
+from repro.kernels.ntt_mul import ops as NO
+
+RNG = np.random.default_rng(23)
+DIGIT_BITS = 16
+
+
+def _rand_int(bits):
+    return int(L.random_bigints(RNG, 1, bits)[0]) | (1 << (bits - 1))
+
+
+def _digits(ints, m, bits=DIGIT_BITS):
+    return jnp.asarray(np.stack([L.int_to_limbs(v, m, bits) for v in ints]))
+
+
+@pytest.fixture(autouse=True)
+def _fresh_cache():
+    NO.clear_operand_cache()
+    yield
+    NO.clear_operand_cache()
+
+
+# ---------------------------------------------------------------------------
+# bit-identity: prepared vs plain vs python-int oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("nprimes", [2, 3])
+def test_prepared_bit_identical_both_prime_sets(nprimes):
+    nd = 64
+    bits = nd * DIGIT_BITS
+    a_ints = [_rand_int(bits) for _ in range(3)]
+    b_int = _rand_int(bits)
+    a = _digits(a_ints, nd)
+    b = _digits([b_int] * 3, nd)
+    plain = np.asarray(NO.ntt_mul_digits(a, b, nprimes=nprimes))
+    prep = np.asarray(NO.ntt_mul_digits_prepared(a, b_int, nprimes=nprimes))
+    np.testing.assert_array_equal(prep, plain)
+    for i, ai in enumerate(a_ints):
+        assert L.limbs_to_int(prep[i], DIGIT_BITS) == ai * b_int, i
+    stats = NO.operand_cache_stats()
+    # one entry holds ALL per-prime rows for a (value, prime set, N) key
+    assert stats["misses"] == 1 and stats["entries"] == 1
+
+
+@pytest.mark.parametrize("digit_bits", [8, 16])
+def test_prepared_through_pipeline_digit_bits(digit_bits):
+    """mul_digits_via_pipeline repacks any digit radix to 32-bit limbs
+    before dispatch, so b_const must give identical results at radix
+    2**8 and 2**16, cached AND uncached."""
+    nd32 = 64                                   # 1024-bit operands
+    bits = nd32 * 32
+    nd = bits // digit_bits
+    a_int, b_int = _rand_int(bits), _rand_int(bits)
+    a = _digits([a_int], nd, digit_bits)
+    b = _digits([b_int], nd, digit_bits)
+    with api.configure(mul_method="ntt"):
+        cached = np.asarray(DV._mul_equalized(a, b, digit_bits,
+                                              b_const=b_int))
+        assert NO.operand_cache_stats()["misses"] > 0
+        with api.configure(ntt_cache_entries=0):
+            uncached = np.asarray(DV._mul_equalized(a, b, digit_bits,
+                                                    b_const=b_int))
+    np.testing.assert_array_equal(cached, uncached)
+    assert L.limbs_to_int(cached[0], digit_bits) == a_int * b_int
+
+
+def test_capacity_zero_disables_prepared_path():
+    """ntt_cache_entries=0 is the A/B switch: b_const callers must fall
+    back to the plain two-transform kernel, leaving the cache cold."""
+    from repro.core.mul import mul_limbs32
+
+    bits = 1024
+    a_int, b_int = _rand_int(bits), _rand_int(bits)
+    a32 = jnp.asarray(L.int_to_limbs(a_int, bits // 32, 32))[None, :]
+    b32 = jnp.asarray(L.int_to_limbs(b_int, bits // 32, 32))[None, :]
+    with api.configure(ntt_cache_entries=0):
+        out = np.asarray(mul_limbs32(a32, b32, method="ntt",
+                                     b_const=b_int))
+        stats = NO.operand_cache_stats()
+    assert stats == {"hits": 0, "misses": 0, "evictions": 0,
+                     "entries": 0, "capacity": 0}
+    assert L.limbs_to_int(out[0], 32) == a_int * b_int
+
+
+# ---------------------------------------------------------------------------
+# LRU bookkeeping: keying, hits, eviction order
+# ---------------------------------------------------------------------------
+
+def test_cache_key_isolation():
+    """Distinct values, prime sets, and transform lengths must occupy
+    DISTINCT entries -- a collision would silently corrupt products."""
+    n = 256
+    v1, v2 = _rand_int(1024), _rand_int(1024)
+    r_v1_p2 = NO.prepared_operand(v1, n, 2)
+    r_v2_p2 = NO.prepared_operand(v2, n, 2)
+    r_v1_p3 = NO.prepared_operand(v1, n, 3)
+    r_v1_n512 = NO.prepared_operand(v1, 512, 2)
+    assert NO.operand_cache_stats()["entries"] == 4
+    assert len(r_v1_p2) == 2 and len(r_v1_p3) == 3
+    assert r_v1_p2[0].shape == (1, n) and r_v1_n512[0].shape == (1, 512)
+    assert not np.array_equal(np.asarray(r_v1_p2[0]),
+                              np.asarray(r_v2_p2[0]))
+    # same key -> same cached rows, counted as a hit
+    again = NO.prepared_operand(v1, n, 2)
+    assert again is r_v1_p2
+    assert NO.operand_cache_stats()["hits"] == 1
+
+
+def test_eviction_order_lru():
+    """Capacity-2 cache: touching an old entry protects it; the LEAST
+    recently used entry is the one evicted."""
+    n = 128
+    v1, v2, v3 = (_rand_int(512) for _ in range(3))
+    with api.configure(ntt_cache_entries=2):
+        NO.prepared_operand(v1, n, 2)
+        NO.prepared_operand(v2, n, 2)
+        NO.prepared_operand(v1, n, 2)           # refresh v1: v2 is now LRU
+        NO.prepared_operand(v3, n, 2)           # evicts v2, not v1
+        stats = NO.operand_cache_stats()
+        assert stats["entries"] == 2 and stats["evictions"] == 1
+        assert (v1, 2, n) in NO._prepared_cache
+        assert (v2, 2, n) not in NO._prepared_cache
+        assert (v3, 2, n) in NO._prepared_cache
+        NO.prepared_operand(v1, n, 2)           # still resident: a hit
+        assert NO.operand_cache_stats()["hits"] == 2
+        NO.prepared_operand(v2, n, 2)           # evicted: a fresh miss
+        assert NO.operand_cache_stats()["misses"] == 4
+
+
+def test_miss_inside_trace_caches_concrete_rows():
+    """A cache miss can happen WHILE an outer jit is tracing (the first
+    trace of a b_const divmod).  The rows stored then must be concrete
+    host arrays, not that trace's tracers -- a poisoned entry would
+    crash every later eager caller with UnexpectedTracerError."""
+    import jax
+
+    nd = 64
+    bits = nd * DIGIT_BITS
+    a_int, b_int = _rand_int(bits), _rand_int(bits)
+    a = _digits([a_int], nd)
+
+    traced = jax.jit(
+        lambda x: NO.ntt_mul_digits_prepared(x, b_int))(a)
+    assert NO.operand_cache_stats()["misses"] == 1
+    for rows in NO._prepared_cache.values():
+        for r in rows:
+            assert isinstance(r, jax.Array)
+            np.asarray(r)                    # concretizable: not a tracer
+    # eager call reusing the entry populated during the trace
+    eager = NO.ntt_mul_digits_prepared(a, b_int)
+    assert NO.operand_cache_stats()["hits"] == 1
+    np.testing.assert_array_equal(np.asarray(eager), np.asarray(traced))
+    assert L.limbs_to_int(np.asarray(eager)[0], DIGIT_BITS) == a_int * b_int
+
+
+def test_configure_rejects_bad_capacity():
+    with pytest.raises(ValueError, match="ntt_cache_entries"):
+        api.configure(ntt_cache_entries=-1)
+    with pytest.raises(ValueError, match="ntt_cache_entries"):
+        api.configure(ntt_cache_entries="lots")
+
+
+def test_cache_stats_facade_shape():
+    stats = api.cache_stats()
+    assert set(stats) == {"twiddle", "operand", "autotune"}
+    for section in stats.values():
+        assert {"hits", "misses"} <= set(section)
+    assert stats["operand"]["capacity"] == NO.operand_cache_capacity()
+
+
+# ---------------------------------------------------------------------------
+# memoized modular setups (the constants that FEED the operand cache)
+# ---------------------------------------------------------------------------
+
+def test_modular_setups_memoized():
+    n = _rand_int(512) | 1
+    assert M.mont_setup(n, 512) is M.mont_setup(n, 512)
+    assert M.barrett_setup(n, 512) is M.barrett_setup(n, 512)
+    ctx = M.mont_setup(n, 512)
+    # _as_barrett promotes a MontCtx on EVERY Barrett-path call; the
+    # promotion must be a cache hit, not a fresh B**2m // n division
+    assert M._as_barrett(ctx) is M._as_barrett(ctx)
+    bctx = M._as_barrett(ctx)
+    assert bctx.mu == (1 << (32 * 32)) // n     # B**2m, m = 32 digits

@@ -212,6 +212,6 @@ def test_cross_fermat_little_theorem(p, a):
     m_digits = MOD.mont_setup(p).m
     x = jnp.asarray(L.ints_to_batch([a], m_digits, 16))
     got = {be: np.asarray(_fermat_fn(p, be)(x))
-           for be in ("jnp", "barrett")}
+           for be in ("jnp", "barrett", "barrett_fused")}
     for be, out in got.items():
         assert L.limbs_to_int(out[0], 16) == 1, (be, hex(p), hex(a))
