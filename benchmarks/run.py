@@ -76,11 +76,20 @@ def write_json(suite: str, records: list, out_dir: str) -> str:
     for rec in records:
         merged[_key(rec)] = rec
     payload = {
-        "schema": "op,bits,batch,backend,ns_per_op,speedup_vs_jnp",
+        "schema": ("op,bits,batch,backend,ns_per_op,speedup_vs_jnp"
+                   "[,perf_gate{baseline,floor,headroom}]"),
         "records": sorted(merged.values(),
                           key=lambda r: (r["op"], r["bits"], r["batch"],
                                          r["backend"])),
     }
+    try:
+        # snapshot the arithmetic cache counters alongside the records:
+        # a cold operand cache in a CI artifact for a fixed-operand
+        # suite is the reuse-regression signal (see api.cache_stats)
+        from repro import api
+        payload["cache_stats"] = api.cache_stats()
+    except Exception:  # noqa: BLE001 - records still land without it
+        pass
     with open(path, "w") as f:
         json.dump(payload, f, indent=1)
         f.write("\n")
@@ -159,6 +168,12 @@ def check_baseline(suite: str, records: list,
                     f"trajectory row, ungated)")
             continue
         floor = base["speedup_vs_jnp"] * (1.0 - tolerance)
+        # annotate the record itself so --json-out artifacts carry the
+        # gate verdict (floor + headroom) next to the measurement
+        rec["perf_gate"] = {
+            "baseline": base["speedup_vs_jnp"], "floor": round(floor, 4),
+            "headroom": round(rec["speedup_vs_jnp"] / floor - 1.0, 4),
+        }
         if margins is not None:
             margins.append(
                 f"{suite}:{'/'.join(map(str, _key(rec)))} measured "
@@ -218,16 +233,20 @@ def main() -> None:
             traceback.print_exc()
             continue
         # check BEFORE writing: --json-out pointed at the baseline dir
-        # must not overwrite the baseline the check compares against
-        if records and args.check_baseline:
+        # must not overwrite the baseline the check compares against.
+        # --json-out alone still runs the comparison (problems
+        # discarded) so the written records carry perf_gate headroom.
+        if records and (args.check_baseline or args.json_out):
             margins: list[str] = []
             infos: list[str] = []
-            regressions.extend(check_baseline(name, records,
-                                              margins=margins, infos=infos))
-            for line in margins:
-                print(f"# perf-gate: {line}", flush=True)
-            for line in infos:
-                print(f"# info: {line}", flush=True)
+            problems = check_baseline(name, records,
+                                      margins=margins, infos=infos)
+            if args.check_baseline:
+                regressions.extend(problems)
+                for line in margins:
+                    print(f"# perf-gate: {line}", flush=True)
+                for line in infos:
+                    print(f"# info: {line}", flush=True)
         if records and args.json_out:
             path = write_json(name, records, args.json_out)
             print(f"# wrote {path} ({len(records)} records)", flush=True)

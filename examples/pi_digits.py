@@ -16,9 +16,13 @@ O(log n) trace), so the per-width compile cliff is gone; what remains
 at large ``--digits`` is the one-time XLA compile of the whole fused
 series+conversion program plus the series arithmetic itself (1400
 digits: ~8 min total on CPU interpret, all 1400 digits verified).
-``--show-dispatch`` prints which multiply backend the wide steps take.
+``--show-dispatch`` turns on the observability layer for the run and
+prints the REAL dispatch decisions afterwards (which multiply/divide
+tier every width actually took, and why); ``--trace-out`` additionally
+writes the span buffer as Chrome-trace JSON.
 """
 import argparse
+import contextlib
 import time
 
 from repro.core import pi as P
@@ -30,18 +34,27 @@ def main():
     ap.add_argument("--no-verify", action="store_true",
                     help="skip the Python-int oracle comparison")
     ap.add_argument("--show-dispatch", action="store_true",
-                    help="print the multiply backend the wide steps use")
+                    help="trace dispatch decisions and print the report")
+    ap.add_argument("--trace-out", default=None,
+                    help="write spans as Chrome-trace JSON (implies "
+                         "--show-dispatch)")
     args = ap.parse_args()
 
-    if args.show_dispatch:
-        import numpy as np
-        from repro.core.mul import select_method
-        bits = int(args.digits * np.log2(10)) + 64
-        print(f"wide multiplies (~{bits} bits, batch 1) dispatch to: "
-              f"{select_method(bits, batch=1)!r}")
+    scope = contextlib.nullcontext()
+    if args.show_dispatch or args.trace_out:
+        from repro import api, obs
+        scope = api.configure(observability=True)
 
     t0 = time.time()
-    got = P.pi_digits(args.digits)
+    with scope:
+        got = P.pi_digits(args.digits)
+        if args.show_dispatch or args.trace_out:
+            print("dispatch report (per-decision, from the trace buffer):")
+            for line in obs.format_report():
+                print(line)
+            if args.trace_out:
+                print(f"wrote spans -> "
+                      f"{obs.write_chrome_trace(args.trace_out)}")
     dt = time.time() - t0
     print(f"pi ({args.digits} digits, {dt:.2f}s, series + base conversion "
           f"on device):")

@@ -4,8 +4,13 @@ TPU lanes.
 
   PYTHONPATH=src python examples/rsa_crypto.py --bits 512 --batch 32 \
       --backend pallas
+
+``--show-dispatch`` traces the run through the observability layer and
+prints which modexp backend / window size the dispatchers actually
+picked (and which threshold fired).
 """
 import argparse
+import contextlib
 import time
 
 import jax
@@ -24,8 +29,25 @@ def main():
                     help="modexp backend (core.modular); 'auto' routes "
                          "through the batch-aware MODEXP_DISPATCH (fused "
                          "windowed Pallas ladder for kernel-sized batches)")
+    ap.add_argument("--show-dispatch", action="store_true",
+                    help="trace dispatch decisions and print the report")
     args = ap.parse_args()
     backend = None if args.backend == "auto" else args.backend
+
+    scope = contextlib.nullcontext()
+    if args.show_dispatch:
+        from repro import api
+        scope = api.configure(observability=True)
+    with scope:
+        run(args, backend)
+    if args.show_dispatch:
+        from repro import obs
+        print("dispatch report (per-decision, from the trace buffer):")
+        for line in obs.format_report():
+            print(line)
+
+
+def run(args, backend):
 
     key = R.generate_key(bits=args.bits, seed=1)
     msgs = [R.digest_int(f"message-{i}".encode(), args.bits)

@@ -14,6 +14,7 @@ _API_NAMES = (
     "mul", "divmod", "mod_exp", "rsa_sign", "rsa_verify", "rsa_decrypt",
     "to_decimal", "configure", "to_limbs", "from_limbs", "mod_setup",
     "exp_bits_msb", "generate_key", "digest_int", "RSAKey",
+    "cache_stats", "metrics", "dispatch_report",
 )
 
 __all__ = list(_API_NAMES) + ["api"]

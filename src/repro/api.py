@@ -56,7 +56,8 @@ RSAKey = _rsa.RSAKey
 
 __all__ = [
     "mul", "divmod", "mod_exp", "rsa_sign", "rsa_verify", "rsa_decrypt",
-    "to_decimal", "configure", "cache_stats", "to_limbs", "from_limbs",
+    "to_decimal", "configure", "cache_stats", "metrics", "dispatch_report",
+    "to_limbs", "from_limbs",
     "mod_setup", "exp_bits_msb", "generate_key", "digest_int", "RSAKey",
 ]
 
@@ -215,7 +216,8 @@ class _ConfigureContext:
 
 def configure(*, mul_method=_UNSET, div_method=_UNSET,
               modexp_backend=_UNSET, autotune=_UNSET,
-              ntt_cache_entries=_UNSET) -> _ConfigureContext:
+              ntt_cache_entries=_UNSET, observability=_UNSET,
+              on_retrace=_UNSET) -> _ConfigureContext:
     """Override dispatch decisions, process-wide or scoped.
 
     Keyword-only; omitted knobs are left untouched, ``None`` clears an
@@ -229,7 +231,14 @@ def configure(*, mul_method=_UNSET, div_method=_UNSET,
         prepared-operand NTT cache (kernels/ntt_mul); 0 disables the
         prepared path entirely (the A/B switch benchmarks use), None
         restores the default (see kernels/ntt_mul/ops.
-        DEFAULT_CACHE_ENTRIES).
+        DEFAULT_CACHE_ENTRIES),
+      * ``observability``   bool -- master switch for repro.obs
+        (dispatch-trace events, spans, engine metric ticking); off by
+        default so instrumentation costs nothing on hot paths,
+      * ``on_retrace``      "ignore" / "warn" / "raise" -- the
+        retrace-alarm policy when an armed zero-retrace contract sees
+        a fresh jit trace (default "warn"; the ``retraces_total``
+        counter ticks under every policy, see repro/obs/retrace.py).
 
     Returns a context manager: ``with configure(...):`` restores the
     previous values on exit; a bare call applies them permanently.
@@ -269,6 +278,19 @@ def configure(*, mul_method=_UNSET, div_method=_UNSET,
                 f"ntt_cache_entries must be an int >= 0 or None, got "
                 f"{ntt_cache_entries!r}")
         updates["ntt_cache_entries"] = ntt_cache_entries
+    if observability is not _UNSET:
+        if observability is not None and not isinstance(observability, bool):
+            raise ValueError(
+                f"observability must be a bool or None, got "
+                f"{observability!r}")
+        updates["observability"] = observability
+    if on_retrace is not _UNSET:
+        from repro.obs import retrace as _rt
+        if on_retrace is not None and on_retrace not in _rt.POLICIES:
+            raise ValueError(
+                f"unknown on_retrace policy {on_retrace!r}; choose from "
+                f"{_rt.POLICIES}")
+        updates["on_retrace"] = on_retrace
     return _ConfigureContext(_config.set_overrides(updates))
 
 
@@ -281,20 +303,66 @@ def cache_stats() -> dict:
         transforms of host-known constants, LRU-bounded by
         ``configure(ntt_cache_entries=...)``),
       * ``autotune`` -- the kernel tile-sweep cache (hits/misses only
-        tick while ``configure(autotune=True)``).
+        tick while ``configure(autotune=True)``),
+      * ``ctx``      -- the memoized host-side modulus contexts
+        (core/modular.mont_setup / barrett_setup lru_caches; the
+        ``_as_barrett`` promotion path answers from the barrett_setup
+        cache, so its reuse shows up there).
 
     Returns plain dicts of ints -- cheap to call, safe to log from
     serving loops; the ops knob for verifying that repeat-operand work
     is actually being reused (a cold ``operand`` cache under a
     repeat-multiply-by-constant workload means b_const isn't being
-    threaded)."""
+    threaded; churning ``ctx`` misses under a finite key set means
+    contexts are being rebuilt per call)."""
     from repro.kernels.common import autotune as _at
     from repro.kernels.ntt_mul import ops as _nops
 
-    tw = _nops.twiddle_tables.cache_info()
+    def _lru(info):
+        return {"hits": info.hits, "misses": info.misses,
+                "entries": info.currsize, "capacity": info.maxsize}
+
     return {
-        "twiddle": {"hits": tw.hits, "misses": tw.misses,
-                    "entries": tw.currsize, "capacity": tw.maxsize},
+        "twiddle": _lru(_nops.twiddle_tables.cache_info()),
         "operand": _nops.operand_cache_stats(),
         "autotune": _at.cache_stats(),
+        "ctx": {
+            "mont_setup": _lru(_M.mont_setup.cache_info()),
+            "barrett_setup": _lru(_M.barrett_setup.cache_info()),
+        },
     }
+
+
+# ---------------------------------------------------------------------------
+# observability
+# ---------------------------------------------------------------------------
+
+def metrics() -> dict:
+    """Snapshot of the process metrics registry (repro/obs/metrics.py)
+    plus the arithmetic cache counters.
+
+    ``{"counters": {name: {labels: value}}, "gauges": ...,
+    "histograms": {name: {labels: {count/sum/min/max/p50/p95/p99}}},
+    "caches": cache_stats()}`` -- JSON-serializable, so serving loops
+    and CI can dump it as an artifact.  Dispatch/span/latency series
+    only populate while ``configure(observability=True)``; the
+    ``retraces_total`` counter ticks regardless (the runtime
+    zero-retrace guard, see repro/obs/retrace.py)."""
+    from repro.obs import metrics as _om
+
+    snap = _om.REGISTRY.snapshot()
+    snap["caches"] = cache_stats()
+    return snap
+
+
+def dispatch_report() -> list:
+    """Aggregated dispatch-trace rows ({dispatcher, nbits, batch,
+    choice, rule, detail, count}) from the bounded event buffer --
+    which backend each tier chooser picked and WHICH threshold fired.
+    Empty unless ``configure(observability=True)`` was on while the
+    workload dispatched (decisions are recorded at trace time, so a
+    jit-cached replay emits nothing new).  Render with
+    ``repro.obs.format_report()``."""
+    from repro.obs import trace as _ot
+
+    return _ot.report()

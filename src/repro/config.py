@@ -26,10 +26,14 @@ import os
 import warnings
 
 OVERRIDE_NAMES = ("mul_method", "div_method", "modexp_backend", "autotune",
-                  "ntt_cache_entries")
+                  "ntt_cache_entries", "observability", "on_retrace")
 
-# ntt_cache_entries has no env alias: it never existed as a REPRO_* var,
-# so there is no legacy spelling to keep working.
+# ntt_cache_entries / observability / on_retrace have no env aliases:
+# they never existed as REPRO_* vars, so there is no legacy spelling to
+# keep working.  ``observability`` is the repro.obs master switch
+# (dispatch trace + spans + engine metric ticking); ``on_retrace``
+# picks the retrace-alarm policy ("ignore" / "warn" / "raise", see
+# repro/obs/retrace.py -- the retrace COUNTER ticks regardless).
 ENV_ALIASES = {
     "mul_method": "REPRO_MUL_BACKEND",
     "div_method": "REPRO_DIV_BACKEND",

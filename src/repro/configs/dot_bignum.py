@@ -126,12 +126,16 @@ def pick_modexp_window(exp_bits: int, cap: int | None = None) -> int:
     ``modexp_modmul_count`` -- short exponents (RSA e = 65537) get small
     windows where the 2**w table build would dominate, long exponents
     saturate at the cap."""
+    from repro.obs import trace as _trace
+
     cap = cap or MODEXP_DISPATCH.window_bits
     best, best_cost = 1, None
     for w in range(1, max(1, cap) + 1):
         cost = modexp_modmul_count(exp_bits, w)
         if best_cost is None or cost < best_cost:
             best, best_cost = w, cost
+    _trace.emit("modexp_window", exp_bits, 1, str(best), "argmin_modmuls",
+                cap=cap, modmuls=best_cost)
     return best
 
 

@@ -470,15 +470,24 @@ def select_div_method(nbits_a: int, nbits_b: int, batch: int = 1) -> str:
     """
     from repro import config as _rc
     from repro.configs.dot_bignum import DIV_DISPATCH, MUL_DISPATCH
+    from repro.obs import trace as _trace
 
+    nbits = max(nbits_a, nbits_b)
     override = _rc.resolve("div_method", DIV_METHODS, "division method")
     if override:
-        return override
-    if batch < MUL_DISPATCH.kernel_min_batch:
-        return "recip"
-    if max(nbits_a, nbits_b) <= DIV_DISPATCH.schoolbook_max_bits:
-        return "schoolbook"
-    return "recip"
+        choice, rule, detail = override, "override", {}
+    elif batch < MUL_DISPATCH.kernel_min_batch:
+        choice, rule = "recip", "kernel_min_batch"
+        detail = {"threshold": MUL_DISPATCH.kernel_min_batch}
+    elif nbits <= DIV_DISPATCH.schoolbook_max_bits:
+        choice, rule = "schoolbook", "schoolbook_max_bits"
+        detail = {"threshold": DIV_DISPATCH.schoolbook_max_bits}
+    else:
+        choice, rule = "recip", "above_schoolbook_max_bits"
+        detail = {"threshold": DIV_DISPATCH.schoolbook_max_bits}
+    _trace.emit("div", nbits, batch, choice, rule,
+                nbits_a=nbits_a, nbits_b=nbits_b, **detail)
+    return choice
 
 
 def divmod_digits(a: jax.Array, b: jax.Array,

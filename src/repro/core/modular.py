@@ -555,22 +555,28 @@ def select_modexp_backend(nbits: int, batch: int = 1, ebits: int = 0,
     REPRO_MODEXP_BACKEND env var is its deprecated alias."""
     from repro import config as _rc
     from repro.configs.dot_bignum import MODEXP_DISPATCH as cfg
+    from repro.obs import trace as _trace
 
     override = _rc.resolve("modexp_backend", BACKENDS, "modexp backend")
-    if override:
-        return _resolve_backend(override, ctx)
     fused_ok = (batch >= cfg.packed_min_batch
                 and nbits <= cfg.fused_max_bits
                 and ebits >= cfg.fused_min_exp_bits)
-    if isinstance(ctx, BarrettCtx):
-        return "barrett_fused" if fused_ok else "barrett"
-    if _DEFAULT_BACKEND != "jnp":
+    detail = {"ebits": ebits, "fused_ok": fused_ok}
+    if override:
+        choice, rule = _resolve_backend(override, ctx), "override"
+    elif isinstance(ctx, BarrettCtx):
+        choice = "barrett_fused" if fused_ok else "barrett"
+        rule = "barrett_ctx_fused" if fused_ok else "barrett_ctx"
+    elif _DEFAULT_BACKEND != "jnp":
         # an explicit set_default_backend() choice wins over the
         # size-based dispatch (force "jnp" via backend= or the env var)
-        return _DEFAULT_BACKEND
-    if fused_ok:
-        return "pallas"
-    return "jnp"
+        choice, rule = _DEFAULT_BACKEND, "default_backend"
+    elif fused_ok:
+        choice, rule = "pallas", "fused_thresholds"
+    else:
+        choice, rule = "jnp", "below_fused_thresholds"
+    _trace.emit("modexp", nbits, batch, choice, rule, **detail)
+    return choice
 
 
 def mod_exp(base: jax.Array, exp_bits: jax.Array, ctx,

@@ -392,24 +392,38 @@ def select_method(nbits: int, batch: int = 1,
     """
     from repro import config as _rc
     from repro.configs.dot_bignum import MUL_DISPATCH as cfg
+    from repro.obs import trace as _trace
 
     override = _rc.resolve("mul_method", MUL_METHODS, "multiply method")
     if override:
-        return override
-    if batch < cfg.kernel_min_batch:
-        return "dot" if nbits <= cfg.small_batch_dot_max_bits \
-            else "ntt"
-    if prefer_mxu and nbits <= cfg.mxu_max_bits:
-        return "pallas_mxu"
-    if nbits <= cfg.jnp_max_bits:
-        return "dot"
-    if nbits <= cfg.vnc_max_bits:
-        return "pallas"
-    if nbits <= cfg.fused_kara_max_bits:
-        return "pallas_kara"
-    if nbits < cfg.ntt_min_bits:
-        return "karatsuba"
-    return "ntt"
+        choice, rule, detail = override, "override", {}
+    elif batch < cfg.kernel_min_batch:
+        if nbits <= cfg.small_batch_dot_max_bits:
+            choice, rule = "dot", "small_batch_dot_max_bits"
+            detail = {"threshold": cfg.small_batch_dot_max_bits}
+        else:
+            choice, rule = "ntt", "small_batch_ntt"
+            detail = {"threshold": cfg.small_batch_dot_max_bits}
+    elif prefer_mxu and nbits <= cfg.mxu_max_bits:
+        choice, rule = "pallas_mxu", "prefer_mxu"
+        detail = {"threshold": cfg.mxu_max_bits}
+    elif nbits <= cfg.jnp_max_bits:
+        choice, rule = "dot", "jnp_max_bits"
+        detail = {"threshold": cfg.jnp_max_bits}
+    elif nbits <= cfg.vnc_max_bits:
+        choice, rule = "pallas", "vnc_max_bits"
+        detail = {"threshold": cfg.vnc_max_bits}
+    elif nbits <= cfg.fused_kara_max_bits:
+        choice, rule = "pallas_kara", "fused_kara_max_bits"
+        detail = {"threshold": cfg.fused_kara_max_bits}
+    elif nbits < cfg.ntt_min_bits:
+        choice, rule = "karatsuba", "below_ntt_min_bits"
+        detail = {"threshold": cfg.ntt_min_bits}
+    else:
+        choice, rule = "ntt", "ntt_min_bits"
+        detail = {"threshold": cfg.ntt_min_bits}
+    _trace.emit("mul", nbits, batch, choice, rule, **detail)
+    return choice
 
 
 def _flatten_leading(x: jax.Array):

@@ -1,0 +1,161 @@
+"""Observability inspector: replay a workload with tracing on and
+print what the stack actually did.
+
+Three sections, all driven through the ``repro.obs`` layer rather than
+ad-hoc prints:
+
+1. **Dispatch report** -- a sweep over the size/batch grid calls the
+   real tier choosers (multiply / divide / modexp / window picker) so
+   the report shows every dispatch tier and WHICH threshold picks it,
+   straight from the dispatch-trace ring buffer.  The sweep only runs
+   the Python dispatchers -- no device work -- so it covers the
+   8192-bit NTT tier without compiling an 8192-bit multiply.
+2. **Serving replay** -- a mixed RSA + mod_exp Poisson trace through
+   the continuous-batching engine (same builder as launch/
+   serve_bignum); per-bucket p50/p95/p99 come from the engine's OWN
+   latency histograms, and the retrace counter proves the zero-retrace
+   contract held.
+3. **Artifacts** -- the span buffer as Chrome-trace JSON
+   (``--trace-out``, load in chrome://tracing or ui.perfetto.dev) and
+   optionally the full metrics snapshot (``--metrics-out``).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.inspect_bignum \
+      --bits 256 --requests 24 --trace-out bignum_trace.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+from repro import api, obs
+from repro.configs.dot_bignum import (
+    DIV_DISPATCH, MODEXP_DISPATCH, MUL_DISPATCH, SERVE, ServeConfig,
+    pick_modexp_window)
+from repro.core.div import select_div_method
+from repro.core.modular import select_modexp_backend
+from repro.core.mul import select_method
+from repro.launch.serve_bignum import build_ops
+from repro.serve.bignum_engine import BignumEngine, poisson_trace, \
+    replay_trace
+
+
+def dispatch_sweep() -> None:
+    """Exercise every dispatch tier through the real choosers (pure
+    host-side: no kernels launch, nothing compiles)."""
+    mc, dc, xc = MUL_DISPATCH, DIV_DISPATCH, MODEXP_DISPATCH
+    kb = mc.kernel_min_batch
+    # multiply: every tier of select_method, batch-aware rules included
+    for nbits in (mc.jnp_max_bits, mc.vnc_max_bits, mc.fused_kara_max_bits,
+                  mc.ntt_min_bits - 32, mc.ntt_min_bits):
+        select_method(nbits, batch=kb)
+    select_method(mc.mxu_max_bits, batch=kb, prefer_mxu=True)
+    select_method(mc.small_batch_dot_max_bits, batch=1)        # tiny batch
+    select_method(mc.small_batch_dot_max_bits + 32, batch=1)   # batch-1 NTT
+    # division: both backends, both batch regimes
+    select_div_method(dc.schoolbook_max_bits, dc.schoolbook_max_bits,
+                      batch=kb)
+    select_div_method(2 * dc.schoolbook_max_bits, dc.schoolbook_max_bits,
+                      batch=kb)
+    select_div_method(dc.schoolbook_max_bits, dc.schoolbook_max_bits,
+                      batch=1)
+    # modexp: composition vs fused ladder, odd (Montgomery) and even
+    # (Barrett) moduli -- mod_setup on an even modulus yields the
+    # BarrettCtx that routes the barrett tiers
+    eb = xc.fused_min_exp_bits
+    select_modexp_backend(256, batch=xc.packed_min_batch, ebits=eb)
+    select_modexp_backend(256, batch=1, ebits=eb)
+    bctx = api.mod_setup((1 << 254) + 2, 256)                  # even: Barrett
+    select_modexp_backend(256, batch=xc.packed_min_batch, ebits=eb,
+                          ctx=bctx)
+    select_modexp_backend(256, batch=1, ebits=eb, ctx=bctx)
+    # window picker: short (RSA e=65537) vs long exponents
+    pick_modexp_window(17)
+    pick_modexp_window(2048)
+
+
+def latency_table() -> list:
+    """Per-bucket latency lines from the engine's own histograms."""
+    hist = obs.REGISTRY.get("serve_request_latency_seconds")
+    lines = []
+    if hist is None:
+        return lines
+    for labels, row in hist.snapshot().items():
+        pcts = " ".join(
+            f"{k} {row[k] * 1e3:.2f}ms" for k in ("p50", "p95", "p99"))
+        lines.append(f"  {labels}: n={row['count']} {pcts}")
+    return lines
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bits", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=200.0)
+    ap.add_argument("--groups", type=int, default=2)
+    ap.add_argument("--slots", type=int, default=SERVE.slots)
+    ap.add_argument("--backend", default="jnp",
+                    help="modexp backend for the replay (jnp: fastest "
+                         "compile on CPU interpret grids)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace-out", default="bignum_trace.json",
+                    help="Chrome-trace JSON output path")
+    ap.add_argument("--metrics-out", default=None,
+                    help="also dump the api.metrics() snapshot as JSON")
+    args = ap.parse_args(argv)
+
+    with api.configure(observability=True):
+        obs.reset()
+        dispatch_sweep()
+
+        templates, warm = build_ops("mixed", args.bits, args.groups,
+                                    args.seed)
+        trace = poisson_trace(templates, args.requests, args.rate,
+                              seed=args.seed)
+        engine = BignumEngine(ServeConfig(slots=args.slots),
+                              backend=args.backend)
+        with obs.span("serve/warm", cat="trace", buckets=len(warm)):
+            for w in warm:
+                engine.warm(**w)
+        res = replay_trace(engine, trace)
+
+        print("== dispatch report (which tier, which threshold) ==")
+        for line in obs.format_report():
+            print(line)
+
+        print("\n== serving replay (mixed rsa + mod_exp) ==")
+        st = engine.stats
+        print(f"  {res.n} reqs in {res.makespan_s:.3f}s = "
+              f"{res.ops_per_s:.1f} ops/s | {st.batches} batches "
+              f"({st.flush_full} full / {st.flush_deadline} deadline), "
+              f"{st.padded_lanes} padded lanes, {st.programs} programs")
+        print(f"  retraces after warm: "
+              f"{obs.retrace.count('serve')} (contract: 0)")
+        print("  per-bucket latency (engine histograms):")
+        for line in latency_table():
+            print(line)
+
+        snap = api.metrics()
+        caches = snap["caches"]
+        print("\n== caches ==")
+        for name in ("twiddle", "operand", "autotune"):
+            c = caches[name]
+            print(f"  {name}: hits={c['hits']} misses={c['misses']} "
+                  f"entries={c['entries']}")
+        for name, c in caches["ctx"].items():
+            print(f"  ctx/{name}: hits={c['hits']} misses={c['misses']} "
+                  f"entries={c['entries']}")
+
+        path = obs.write_chrome_trace(args.trace_out)
+        nspans = len(obs.spans.spans())
+        print(f"\nwrote {nspans} spans -> {path} "
+              f"(chrome://tracing / ui.perfetto.dev)")
+        if args.metrics_out:
+            with open(args.metrics_out, "w") as f:
+                json.dump(snap, f, indent=1, default=str)
+            print(f"wrote metrics snapshot -> {args.metrics_out}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,261 @@
+"""Process-level metrics registry: counters, gauges, histograms.
+
+The ONE home for the counters that used to live scattered across the
+stack (``cache_stats()`` plain dicts, ``EngineStats`` attributes,
+``# perf-gate`` stdout lines).  Prometheus-shaped on purpose -- named
+metrics with label sets -- but in-process and stdlib-only: the core
+modules tick these from inside dispatchers and the serving engine, so
+nothing here may pull jax (or anything heavier than ``bisect``) into
+the import graph.
+
+Conventions
+-----------
+* A metric is identified by name; each distinct label set is one
+  *series* under that name (``counter("dispatch_total").inc(op="mul",
+  choice="ntt")`` and ``...inc(op="mul", choice="dot")`` are two
+  series of one counter).
+* Label values are stringified at ingestion so snapshots are
+  JSON-serializable and series keys are stable.
+* ``Histogram`` is bucketed (upper-edge bounds + overflow), tracking
+  count/sum/min/max per series; quantiles come from linear
+  interpolation inside the owning bucket -- exact at bucket edges,
+  within one bucket width otherwise (tests/test_obs.py pins the math
+  on known streams).
+
+``REGISTRY`` is the process singleton the rest of the repo uses;
+``repro.api.metrics()`` snapshots it (plus the arithmetic cache
+counters) for callers.
+"""
+from __future__ import annotations
+
+import bisect
+import math
+from typing import Dict, Iterable, Optional, Tuple
+
+LabelKey = Tuple[Tuple[str, str], ...]
+
+# Default latency bounds: 5 buckets per decade from 10us to 100s --
+# wide enough for interpret-mode CPU modexps AND real-TPU kernel calls.
+LATENCY_BOUNDS_S = tuple(
+    round(1e-5 * 10 ** (i / 5), 10) for i in range(36))
+
+
+def _label_key(labels: Dict[str, object]) -> LabelKey:
+    return tuple(sorted((k, str(v)) for k, v in labels.items()))
+
+
+def _label_str(key: LabelKey) -> str:
+    return ",".join(f"{k}={v}" for k, v in key)
+
+
+def _matches(key: LabelKey, flt: Dict[str, object]) -> bool:
+    have = dict(key)
+    return all(have.get(k) == str(v) for k, v in flt.items())
+
+
+class _Metric:
+    kind = "metric"
+
+    def __init__(self, name: str, help: str = ""):  # noqa: A002
+        self.name = name
+        self.help = help
+
+    def snapshot(self) -> dict:
+        raise NotImplementedError
+
+
+class Counter(_Metric):
+    """Monotone per-series counter.  ``inc(amount, **labels)``."""
+
+    kind = "counter"
+
+    def __init__(self, name: str, help: str = ""):  # noqa: A002
+        super().__init__(name, help)
+        self._series: Dict[LabelKey, float] = {}
+
+    def inc(self, amount: float = 1, **labels) -> None:
+        if amount < 0:
+            raise ValueError(f"counter {self.name}: negative inc {amount}")
+        key = _label_key(labels)
+        self._series[key] = self._series.get(key, 0) + amount
+
+    def value(self, **labels) -> float:
+        """Exact-label-set series value (0 when the series never ticked)."""
+        return self._series.get(_label_key(labels), 0)
+
+    def total(self, **label_filter) -> float:
+        """Sum over every series whose labels INCLUDE ``label_filter``."""
+        return sum(v for k, v in self._series.items()
+                   if _matches(k, label_filter))
+
+    def snapshot(self) -> dict:
+        return {_label_str(k): v for k, v in sorted(self._series.items())}
+
+
+class Gauge(_Metric):
+    """Last-write-wins per-series value.  ``set(value, **labels)``."""
+
+    kind = "gauge"
+
+    def __init__(self, name: str, help: str = ""):  # noqa: A002
+        super().__init__(name, help)
+        self._series: Dict[LabelKey, float] = {}
+
+    def set(self, value: float, **labels) -> None:
+        self._series[_label_key(labels)] = value
+
+    def value(self, **labels) -> Optional[float]:
+        return self._series.get(_label_key(labels))
+
+    def snapshot(self) -> dict:
+        return {_label_str(k): v for k, v in sorted(self._series.items())}
+
+
+class _HistSeries:
+    __slots__ = ("counts", "count", "sum", "vmin", "vmax")
+
+    def __init__(self, nbuckets: int):
+        self.counts = [0] * nbuckets
+        self.count = 0
+        self.sum = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+
+
+class Histogram(_Metric):
+    """Bucketed histogram with interpolated quantiles.
+
+    ``bounds`` are ascending bucket UPPER edges; values above the last
+    bound land in an overflow bucket.  ``quantile(q)`` walks the
+    cumulative counts to the owning bucket and interpolates linearly
+    between its edges (clamped to the observed min/max, so single-value
+    streams answer exactly).
+    """
+
+    kind = "histogram"
+
+    def __init__(self, name: str, help: str = "",  # noqa: A002
+                 bounds: Iterable[float] = LATENCY_BOUNDS_S):
+        super().__init__(name, help)
+        self.bounds = tuple(float(b) for b in bounds)
+        if not self.bounds or any(
+                b1 <= b0 for b0, b1 in zip(self.bounds, self.bounds[1:])):
+            raise ValueError(
+                f"histogram {name}: bounds must be non-empty ascending, "
+                f"got {self.bounds}")
+        self._series: Dict[LabelKey, _HistSeries] = {}
+
+    def _get(self, labels) -> _HistSeries:
+        key = _label_key(labels)
+        s = self._series.get(key)
+        if s is None:
+            s = self._series[key] = _HistSeries(len(self.bounds) + 1)
+        return s
+
+    def observe(self, value: float, **labels) -> None:
+        v = float(value)
+        s = self._get(labels)
+        s.counts[bisect.bisect_left(self.bounds, v)] += 1
+        s.count += 1
+        s.sum += v
+        s.vmin = min(s.vmin, v)
+        s.vmax = max(s.vmax, v)
+
+    def count(self, **labels) -> int:
+        s = self._series.get(_label_key(labels))
+        return s.count if s else 0
+
+    def quantile(self, q: float, **labels) -> Optional[float]:
+        """Interpolated q-quantile (q in [0, 1]); None on an empty series."""
+        if not 0.0 <= q <= 1.0:
+            raise ValueError(f"quantile q must be in [0, 1], got {q}")
+        s = self._series.get(_label_key(labels))
+        if s is None or s.count == 0:
+            return None
+        target = q * s.count
+        cum = 0
+        for i, c in enumerate(s.counts):
+            cum += c
+            if cum >= target and c > 0:
+                lo = self.bounds[i - 1] if i > 0 else min(s.vmin, self.bounds[0])
+                hi = self.bounds[i] if i < len(self.bounds) else s.vmax
+                frac = (target - (cum - c)) / c
+                return min(max(lo + frac * (hi - lo), s.vmin), s.vmax)
+        return s.vmax
+
+    def percentiles(self, qs=(0.5, 0.95, 0.99), **labels) -> dict:
+        return {f"p{q * 100:g}": self.quantile(q, **labels) for q in qs}
+
+    def snapshot(self) -> dict:
+        out = {}
+        for key, s in sorted(self._series.items()):
+            labels = dict(key)
+            out[_label_str(key)] = {
+                "count": s.count,
+                "sum": s.sum,
+                "min": None if s.count == 0 else s.vmin,
+                "max": None if s.count == 0 else s.vmax,
+                **{k: v for k, v in self.percentiles(**labels).items()},
+            }
+        return out
+
+
+class Registry:
+    """Get-or-create metric store; one per process (``REGISTRY``)."""
+
+    def __init__(self):
+        self._metrics: Dict[str, _Metric] = {}
+
+    def _get(self, cls, name: str, help: str, **kwargs):  # noqa: A002
+        m = self._metrics.get(name)
+        if m is None:
+            m = self._metrics[name] = cls(name, help, **kwargs)
+        elif not isinstance(m, cls):
+            raise TypeError(
+                f"metric {name!r} already registered as {m.kind}, "
+                f"requested {cls.kind}")
+        return m
+
+    def counter(self, name: str, help: str = "") -> Counter:  # noqa: A002
+        return self._get(Counter, name, help)
+
+    def gauge(self, name: str, help: str = "") -> Gauge:  # noqa: A002
+        return self._get(Gauge, name, help)
+
+    def histogram(self, name: str, help: str = "",  # noqa: A002
+                  bounds: Iterable[float] = LATENCY_BOUNDS_S) -> Histogram:
+        return self._get(Histogram, name, help, bounds=bounds)
+
+    def get(self, name: str) -> Optional[_Metric]:
+        return self._metrics.get(name)
+
+    def names(self) -> list:
+        return sorted(self._metrics)
+
+    def snapshot(self) -> dict:
+        """JSON-serializable {"counters": {name: {labels: value}},
+        "gauges": ..., "histograms": {name: {labels: {count/sum/min/
+        max/p50/p95/p99}}}} -- the repro.api.metrics() payload."""
+        out = {"counters": {}, "gauges": {}, "histograms": {}}
+        for name, m in sorted(self._metrics.items()):
+            out[m.kind + "s"][name] = m.snapshot()
+        return out
+
+    def reset(self) -> None:
+        self._metrics.clear()
+
+
+REGISTRY = Registry()
+
+
+def counter(name: str, help: str = "") -> Counter:  # noqa: A002
+    return REGISTRY.counter(name, help)
+
+
+def gauge(name: str, help: str = "") -> Gauge:  # noqa: A002
+    return REGISTRY.gauge(name, help)
+
+
+def histogram(name: str, help: str = "",  # noqa: A002
+              bounds: Iterable[float] = LATENCY_BOUNDS_S) -> Histogram:
+    return REGISTRY.histogram(name, help, bounds=bounds)

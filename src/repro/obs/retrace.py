@@ -1,0 +1,75 @@
+"""Retrace alarm: the zero-retrace contract as a RUNTIME guard.
+
+The serving engine's design invariant -- after ``warm()``, no request
+mix may ever trigger a fresh jit trace -- used to live only in a test
+assertion and a benchmark-internal assert.  This module makes it an
+operational signal: when an armed caller (the engine, after warming)
+sees an unexpected jit cache miss, it calls ``alarm(...)``, which
+
+  1. ALWAYS increments the ``retraces_total`` metric (labeled by
+     where/op/bits) -- even with observability off, because a retrace
+     in production is a correctness-of-deployment bug, not a debug
+     detail, and the counter is one dict update;
+  2. applies the configured policy, ``repro.api.configure(
+     on_retrace=...)``: "warn" (default) emits a ``RetraceWarning``,
+     "raise" raises ``RetraceAlarm`` (CI / tests), "ignore" only
+     counts.
+
+``count(...)`` is the read side benchmarks and CI gate on (see
+benchmarks/bench_serve.py: a warmed replay must report zero).
+"""
+from __future__ import annotations
+
+import warnings
+from typing import Optional
+
+from repro import config as _config
+from repro.obs import metrics as _metrics
+
+POLICIES = ("ignore", "warn", "raise")
+DEFAULT_POLICY = "warn"
+
+METRIC = "retraces_total"
+
+
+class RetraceWarning(UserWarning):
+    """An armed zero-retrace contract saw a fresh jit trace."""
+
+
+class RetraceAlarm(RuntimeError):
+    """on_retrace="raise" form of the same signal."""
+
+
+def policy() -> str:
+    """The active on_retrace policy (configure wins; default "warn")."""
+    value = _config.get_override("on_retrace")
+    return DEFAULT_POLICY if value is None else str(value)
+
+
+def alarm(where: str, **labels) -> None:
+    """Report one unexpected retrace at site ``where`` (labels such as
+    op=/bits= identify the offending bucket)."""
+    _metrics.REGISTRY.counter(
+        METRIC, "unexpected jit retraces after warm()").inc(
+        where=where, **labels)
+    pol = policy()
+    detail = "".join(f" {k}={v}" for k, v in sorted(labels.items()))
+    msg = (f"unexpected jit retrace at {where}{detail}: the zero-retrace "
+           f"contract is armed (warm() completed) but this shape/modulus "
+           f"was never warmed -- each such trace costs seconds of "
+           f"compile on the serving path")
+    if pol == "raise":
+        raise RetraceAlarm(msg)
+    if pol == "warn":
+        warnings.warn(msg, RetraceWarning, stacklevel=3)
+
+
+def count(where: Optional[str] = None, **labels) -> int:
+    """Total alarms so far (optionally filtered by site / labels)."""
+    c = _metrics.REGISTRY.get(METRIC)
+    if c is None:
+        return 0
+    flt = dict(labels)
+    if where is not None:
+        flt["where"] = where
+    return int(c.total(**flt))

@@ -1,0 +1,116 @@
+"""Span profiling: wall-time spans distinguishing trace/compile from
+execute, exportable as Chrome-trace JSON.
+
+The retrace economics that motivate the serving engine (a fresh XLA
+trace costs seconds, the op milliseconds) are invisible in aggregate
+timings; spans make them first-class: callers wrap work in
+``span(name, cat=...)`` (or record measured intervals via ``record``)
+with ``cat`` one of ``CATEGORIES`` -- "trace" for tracing/compile
+work, "execute" for steady-state device work -- and the buffer exports
+to the ``chrome://tracing`` / Perfetto JSON array format, where the
+two categories color differently.
+
+When jax is already loaded, an enabled ``span`` also wraps the body in
+``jax.profiler.TraceAnnotation`` so the same names show up inside a
+jax device profile; nothing here imports jax otherwise (the obs
+package stays stdlib-only).
+
+Recording is a no-op when observability is off; timestamps are
+``time.perf_counter`` relative to process start of this module, in
+microseconds (what the trace viewer expects).
+"""
+from __future__ import annotations
+
+import contextlib
+import json
+import sys
+import time
+from typing import List, Optional
+
+from repro import config as _config
+
+CATEGORIES = ("trace", "execute")
+
+_T0 = time.perf_counter()
+_spans: List[dict] = []
+_MAX_SPANS = 65536                  # hard cap: drop, never grow unbounded
+
+
+def enabled() -> bool:
+    return bool(_config.get_override("observability"))
+
+
+def record(name: str, cat: str, t0: float, dur_s: float, **args) -> None:
+    """Record one measured interval (``t0`` from time.perf_counter).
+
+    The low-level hook for callers that only know the category AFTER
+    the work ran (the serving engine categorizes a flush as "trace"
+    iff the jit cache missed)."""
+    if not _config.get_override("observability"):
+        return
+    if cat not in CATEGORIES:
+        raise ValueError(f"unknown span category {cat!r}; choose from "
+                         f"{CATEGORIES}")
+    if len(_spans) >= _MAX_SPANS:
+        return
+    _spans.append({
+        "name": name, "cat": cat,
+        "ts": (t0 - _T0) * 1e6, "dur": dur_s * 1e6,
+        "args": {k: v for k, v in args.items()},
+    })
+
+
+@contextlib.contextmanager
+def span(name: str, cat: str = "execute", **args):
+    """Context manager form of ``record``; annotates via
+    ``jax.profiler.TraceAnnotation`` when jax is already imported."""
+    if not _config.get_override("observability"):
+        yield
+        return
+    ann = contextlib.nullcontext()
+    jax = sys.modules.get("jax")
+    if jax is not None:
+        try:
+            ann = jax.profiler.TraceAnnotation(name)
+        except Exception:  # noqa: BLE001 - annotation is best-effort
+            pass
+    t0 = time.perf_counter()
+    try:
+        with ann:
+            yield
+    finally:
+        record(name, cat, t0, time.perf_counter() - t0, **args)
+
+
+def spans() -> List[dict]:
+    return list(_spans)
+
+
+def clear() -> None:
+    _spans.clear()
+
+
+def chrome_trace() -> dict:
+    """The span buffer as a Chrome-trace JSON object (complete-event
+    "X" phase; load in chrome://tracing or ui.perfetto.dev)."""
+    return {
+        "displayTimeUnit": "ms",
+        "traceEvents": [
+            {"name": s["name"], "cat": s["cat"], "ph": "X",
+             "ts": s["ts"], "dur": s["dur"], "pid": 1,
+             "tid": 1 if s["cat"] == "trace" else 2, "args": s["args"]}
+            for s in _spans],
+    }
+
+
+def write_chrome_trace(path: str) -> str:
+    with open(path, "w") as f:
+        json.dump(chrome_trace(), f, indent=1)
+        f.write("\n")
+    return path
+
+
+def total_seconds(cat: Optional[str] = None) -> float:
+    """Summed span wall time (optionally one category's) in seconds."""
+    return sum(s["dur"] for s in _spans
+               if cat is None or s["cat"] == cat) * 1e-6

@@ -43,8 +43,9 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax
 import numpy as np
 
-from repro import api
+from repro import api, obs
 from repro.configs.dot_bignum import SERVE, ServeConfig, quantize_bits
+from repro.obs import retrace as _retrace
 
 OPS = ("mod_exp", "rsa_sign", "rsa_verify", "rsa_decrypt")
 
@@ -108,6 +109,9 @@ class BignumEngine:
         self._deadlines: Dict[BucketKey, float] = {}
         self._fns: Dict[BucketKey, Callable] = {}
         self._ctxs: Dict[Tuple[int, int], object] = {}
+        # the zero-retrace contract arms once warm() completes: any jit
+        # body execution after that is an unexpected retrace
+        self._warmed = False
 
     # -- bucketing --------------------------------------------------------
 
@@ -143,17 +147,20 @@ class BignumEngine:
         op, nbits, _, _ = bkey
         stats = self.stats
         backend = self.backend
+        engine = self
         if op == "mod_exp":
             ctx = self._ctx(sample.modulus, nbits)
 
             def body(base, exp_bits, _ctx=ctx):
                 stats.traces += 1
+                engine._on_trace(op, nbits)
                 return api.mod_exp(base, exp_bits, _ctx, backend=backend)
         elif op == "rsa_decrypt":
             key, crt = sample.key, sample.key.p != 0
 
             def body(base, _key=key, _crt=crt):
                 stats.traces += 1
+                engine._on_trace(op, nbits)
                 return api.rsa_decrypt(base, _key, backend=backend,
                                        crt=_crt)
         else:
@@ -162,11 +169,21 @@ class BignumEngine:
 
             def body(base, _f=f, _key=key):
                 stats.traces += 1
+                engine._on_trace(op, nbits)
                 return _f(base, _key, backend=backend)
         fn = jax.jit(body)
         self._fns[bkey] = fn
         stats.programs += 1
         return fn
+
+    def _on_trace(self, op: str, nbits: int) -> None:
+        """Python-side hook inside every jitted body: runs exactly on
+        jit cache misses (fresh XLA traces).  After ``warm()`` has
+        completed, any execution here breaks the zero-retrace contract
+        -- tick the ``retraces_total`` metric and apply the configured
+        ``on_retrace`` policy (repro/obs/retrace.py)."""
+        if self._warmed:
+            _retrace.alarm("serve", op=op, bits=nbits)
 
     def _execute(self, bkey: BucketKey,
                  reqs: List[BignumRequest]) -> np.ndarray:
@@ -199,10 +216,16 @@ class BignumEngine:
         traffic (for mod_exp, ``exponent`` is a representative value --
         only its quantized width matters).  Serving a warmed bucket
         never traces again: snapshot ``stats.traces`` after warming to
-        assert the zero-retrace property."""
+        assert the zero-retrace property (the runtime form of the same
+        contract is the retrace alarm, armed once any warm() finishes
+        -- see ``_on_trace``)."""
         sample = BignumRequest(rid=-1, op=op, value=np.zeros(1, np.uint32),
                                modulus=modulus, exponent=exponent, key=key)
-        self._execute(self.bucket_key(sample), [sample])
+        self._warmed = False            # warming traces are expected
+        try:
+            self._execute(self.bucket_key(sample), [sample])
+        finally:
+            self._warmed = True
 
     def submit(self, req: BignumRequest, now: float = 0.0
                ) -> List[BignumRequest]:
@@ -215,7 +238,7 @@ class BignumEngine:
         if len(q) == 1:
             self._deadlines[bkey] = req.deadline
         if len(q) >= self.cfg.slots:
-            return self._flush(bkey, "full")
+            return self._flush(bkey, "full", now)
         return []
 
     def next_deadline(self) -> Optional[float]:
@@ -227,22 +250,26 @@ class BignumEngine:
         if not due:
             return []
         _, bkey = min(due, key=lambda t: t[0])
-        return self._flush(bkey, "deadline")
+        return self._flush(bkey, "deadline", now)
 
     def drain_one(self) -> List[BignumRequest]:
         """Force-flush one pending bucket (oldest deadline first)."""
         if not self._deadlines:
             return []
         bkey = min(self._deadlines, key=self._deadlines.get)
-        return self._flush(bkey, "deadline")
+        return self._flush(bkey, "deadline", self._deadlines[bkey])
 
     def pending(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
-    def _flush(self, bkey: BucketKey, reason: str) -> List[BignumRequest]:
+    def _flush(self, bkey: BucketKey, reason: str,
+               now: Optional[float] = None) -> List[BignumRequest]:
         reqs = self._queues.pop(bkey)
         self._deadlines.pop(bkey, None)
+        traces0 = self.stats.traces
+        t0 = time.perf_counter()
         out = self._execute(bkey, reqs)
+        dt = time.perf_counter() - t0
         for i, r in enumerate(reqs):
             if r.op == "mod_exp":
                 r.result = out[i, : -(-r.modulus.bit_length() // 32)]
@@ -256,7 +283,45 @@ class BignumEngine:
             st.flush_full += 1
         else:
             st.flush_deadline += 1
+        if obs.enabled():
+            self._observe_flush(bkey, reqs, reason, now, t0, dt,
+                                traced=self.stats.traces > traces0)
         return list(reqs)
+
+    def _observe_flush(self, bkey: BucketKey, reqs: List[BignumRequest],
+                       reason: str, now: Optional[float], t0: float,
+                       dt: float, traced: bool) -> None:
+        """Mirror one flush into the metrics registry + span buffer
+        (only called with observability on).
+
+        Request latency = virtual queue wait (``now`` - arrival, on the
+        caller's clock) + the REAL measured service time of this flush
+        -- the same accounting replay_trace uses, so the histogram
+        p50/p95/p99 agree with ReplayResult on a replayed trace.  The
+        span category is "trace" iff this flush compiled (the jitted
+        body ran), which is exactly the seconds-vs-milliseconds split
+        the engine exists to manage."""
+        op, nbits, _, _ = bkey
+        r = obs.REGISTRY
+        labels = {"op": op, "bits": nbits}
+        obs.spans.record(f"serve/{op}/{nbits}", "trace" if traced
+                         else "execute", t0, dt,
+                         batch=len(reqs), reason=reason)
+        r.counter("serve_requests_total",
+                  "requests served by the batching engine").inc(
+            len(reqs), **labels)
+        r.counter("serve_batches_total",
+                  "engine flushes by trigger").inc(reason=reason, **labels)
+        r.counter("serve_padded_lanes_total",
+                  "slots padded by repeating lane 0").inc(
+            self.cfg.slots - len(reqs), **labels)
+        hist = r.histogram("serve_request_latency_seconds",
+                           "queue wait + measured service time")
+        for q in reqs:
+            wait = max(0.0, now - q.arrival) if now is not None else 0.0
+            hist.observe(wait + dt, **labels)
+        r.gauge("serve_queue_depth",
+                "requests enqueued across buckets").set(self.pending())
 
 
 # ---------------------------------------------------------------------------
