@@ -118,6 +118,42 @@ def _replay_point(out, records, *, bits, groups, n, rate, slots, seed):
            seconds_per_call=cold.makespan_s, baseline_seconds=None)
 
 
+def _degraded_point(out, records, *, bits, groups, n, rate, seed):
+    """Worst-case resilience point: every modexp KERNEL backend's
+    breaker is forced open (as if the Pallas tiers were quarantined by
+    real failures), so the guarded dispatch must serve the whole trace
+    from the jnp fallback tiers.  Ungated record -- the contract is
+    that the engine still completes with jnp-tier throughput, no hang
+    and no error, not a particular ratio."""
+    from repro.resilience.breaker import BREAKER
+
+    templates, warm = build_ops("mod_exp", bits, groups, seed)
+    engine = BignumEngine(ServeConfig(), backend=None)
+    BREAKER.force_open(op="modexp", backend="pallas")
+    BREAKER.force_open(op="modexp", backend="barrett_fused")
+    try:
+        for w in warm:
+            engine.warm(**w)
+        retraces0 = _retrace.count("serve")
+        res = replay_trace(engine, poisson_trace(templates, n, rate,
+                                                 seed=seed))
+        retraces = _retrace.count("serve") - retraces0
+        if retraces:
+            raise AssertionError(
+                f"degraded engine retraced {retraces}x post-warm")
+    finally:
+        BREAKER.clear_forced()
+        engine.close()
+    out.append(row(
+        f"serve/poisson{bits}/degraded", res.makespan_s / n,
+        f"ops_s={res.ops_per_s:.1f} p50_ms={res.p50_ms:.1f} "
+        f"p99_ms={res.p99_ms:.1f} (kernel breakers forced open; "
+        f"jnp-tier dispatch)"))
+    record(records, op="serve", bits=bits, batch=n,
+           backend="engine_degraded", seconds_per_call=res.makespan_s,
+           baseline_seconds=None)
+
+
 def run(full: bool = False, smoke: bool = False,
         records: list | None = None):
     out = []
@@ -132,6 +168,9 @@ def run(full: bool = False, smoke: bool = False,
         points = [dict(bits=1024, groups=4, n=64, rate=1000.0, slots=8)]
     for p in points:
         _replay_point(out, records, seed=p["bits"], **p)
+    _degraded_point(out, records, bits=256, groups=2,
+                    n=24 if (smoke or not full) else 48,
+                    rate=10000.0, seed=256)
     return out
 
 

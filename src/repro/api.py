@@ -70,11 +70,47 @@ def to_limbs(values, nbits: int) -> np.ndarray:
     """Python int(s) -> uint32 limb array sized for ``nbits``.
 
     A single int gives (m,); a sequence gives (len, m) with
-    m = ceil(nbits / 32).  Values must be >= 0 and < 2**nbits."""
+    m = ceil(nbits / 32).  Values must be >= 0 and < 2**nbits (the
+    declared width, not the rounded-up limb width).  Bad inputs raise
+    ValueError naming the offending argument here at the facade, not as
+    shape errors deep in the limb layer."""
+    import operator
+
+    if not isinstance(nbits, int) or isinstance(nbits, bool) or nbits <= 0:
+        raise ValueError(
+            f"to_limbs: nbits must be a positive int, got {nbits!r}")
     m = -(-nbits // 32)
-    if isinstance(values, int):
-        return _L.int_to_limbs(values, m, 32)
-    return _L.ints_to_batch(list(values), m, 32)
+    single = isinstance(values, int) and not isinstance(values, bool)
+    if single:
+        seq = [values]
+    else:
+        try:
+            seq = list(values)
+        except TypeError:
+            raise ValueError(
+                f"to_limbs: values must be an int or a sequence of ints, "
+                f"got {type(values).__name__}") from None
+    checked = []
+    for i, v in enumerate(seq):
+        where = "values" if single else f"values[{i}]"
+        if isinstance(v, bool):
+            raise ValueError(f"to_limbs: {where} must be an int, got a bool")
+        try:
+            v = operator.index(v)
+        except TypeError:
+            raise ValueError(
+                f"to_limbs: {where} must be an int, got "
+                f"{type(v).__name__}") from None
+        if v < 0:
+            raise ValueError(f"to_limbs: {where} must be >= 0, got {v}")
+        if v.bit_length() > nbits:
+            raise ValueError(
+                f"to_limbs: {where} needs {v.bit_length()} bits but "
+                f"nbits={nbits}")
+        checked.append(v)
+    if single:
+        return _L.int_to_limbs(checked[0], m, 32)
+    return _L.ints_to_batch(checked, m, 32)
 
 
 def from_limbs(arr) -> "int | list[int]":
@@ -113,8 +149,13 @@ def mul(a, b, *, method: str = "auto") -> jax.Array:
     """Full product: (..., m) x (..., m) uint32 limbs -> (..., 2m).
 
     ``method``: "auto" (size/batch dispatch) or one of
-    core/mul.MUL_METHODS."""
-    return _mul.mul_limbs32(a, b, method=method)
+    core/mul.MUL_METHODS.  Under ``configure(selfcheck=...)`` the result
+    is verified against the mod-p residue product identity (one fold per
+    operand, see repro/resilience/selfcheck.py)."""
+    out = _mul.mul_limbs32(a, b, method=method)
+    from repro.resilience import selfcheck as _sc
+    _sc.check_mul(a, b, out)
+    return out
 
 
 def divmod(a, b, *, method: str = "auto",
@@ -124,8 +165,13 @@ def divmod(a, b, *, method: str = "auto",
     core/div.DIV_METHODS.  ``b_const`` declares the divisor a host-known
     constant (b must hold that value in every lane): the reciprocal
     path's fixed-operand multiplies then reuse cached forward NTTs
-    (see cache_stats()["operand"])."""
-    return _div.divmod_limbs32(a, b, method=method, b_const=b_const)
+    (see cache_stats()["operand"]).  Under ``configure(selfcheck=...)``
+    the result is verified against the residue identity
+    res(q)*res(b) + res(r) == res(a)."""
+    q, r = _div.divmod_limbs32(a, b, method=method, b_const=b_const)
+    from repro.resilience import selfcheck as _sc
+    _sc.check_divmod(a, b, q, r)
+    return q, r
 
 
 def to_decimal(x, n_dec: int) -> jax.Array:
@@ -153,7 +199,25 @@ def mod_exp(base, exponent, modulus, *, backend: str | None = None,
     d = _digits_from_limbs(base, ctx.m)
     out = _M.mod_exp(d, jnp.asarray(eb), ctx, backend=backend,
                      window=window)
-    return _limbs_from_digits(out, _limb_width(ctx))
+    out = _limbs_from_digits(out, _limb_width(ctx))
+    from repro.resilience import selfcheck as _sc
+    if _sc.enabled() and isinstance(exponent, int) \
+            and not _sc._any_tracer(base, out):
+        # modexp has no residue identity (see selfcheck.py): the check
+        # is an exact host pow() witness per lane -- the documented cost
+        # of verifying an op with no cheap public inverse
+        mw = np.shape(base)[-1]
+        b_np = np.asarray(base, np.uint32).reshape(-1, mw)
+        o_np = np.asarray(out, np.uint32)
+        o2 = o_np.reshape(-1, o_np.shape[-1])
+        bad = sum(
+            1 for i in range(o2.shape[0])
+            if _L.limbs_to_int(o2[i], 32) != pow(
+                _L.limbs_to_int(b_np[i % b_np.shape[0]], 32),
+                exponent, ctx.n))
+        if bad:
+            _sc.report("mod_exp", bad, "host pow witness")
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -217,7 +281,8 @@ class _ConfigureContext:
 def configure(*, mul_method=_UNSET, div_method=_UNSET,
               modexp_backend=_UNSET, autotune=_UNSET,
               ntt_cache_entries=_UNSET, observability=_UNSET,
-              on_retrace=_UNSET) -> _ConfigureContext:
+              on_retrace=_UNSET, selfcheck=_UNSET,
+              kernel_fallback=_UNSET) -> _ConfigureContext:
     """Override dispatch decisions, process-wide or scoped.
 
     Keyword-only; omitted knobs are left untouched, ``None`` clears an
@@ -238,7 +303,17 @@ def configure(*, mul_method=_UNSET, div_method=_UNSET,
       * ``on_retrace``      "ignore" / "warn" / "raise" -- the
         retrace-alarm policy when an armed zero-retrace contract sees
         a fresh jit trace (default "warn"; the ``retraces_total``
-        counter ticks under every policy, see repro/obs/retrace.py).
+        counter ticks under every policy, see repro/obs/retrace.py),
+      * ``selfcheck``       None/False (off, the default) or "warn" /
+        "raise" -- verify mul/divmod results against mod-p residue
+        identities and mod_exp / engine crypto results against host
+        witnesses; failures tick ``selfcheck_failures_total`` under
+        every policy (see repro/resilience/selfcheck.py),
+      * ``kernel_fallback`` bool -- True/None (default) degrades a
+        failing Pallas tier through jnp to the host reference so every
+        request still answers; False is strict mode (the first kernel
+        failure propagates -- what CI uses to catch regressions that
+        silent degradation would hide, see repro/resilience/guard.py).
 
     Returns a context manager: ``with configure(...):`` restores the
     previous values on exit; a bare call applies them permanently.
@@ -291,6 +366,20 @@ def configure(*, mul_method=_UNSET, div_method=_UNSET,
                 f"unknown on_retrace policy {on_retrace!r}; choose from "
                 f"{_rt.POLICIES}")
         updates["on_retrace"] = on_retrace
+    if selfcheck is not _UNSET:
+        from repro.resilience import selfcheck as _sc
+        if selfcheck not in (None, False) and selfcheck not in _sc.POLICIES:
+            raise ValueError(
+                f"unknown selfcheck policy {selfcheck!r}; choose from "
+                f"{_sc.POLICIES} (or None/False to disable)")
+        updates["selfcheck"] = selfcheck
+    if kernel_fallback is not _UNSET:
+        if kernel_fallback is not None \
+                and not isinstance(kernel_fallback, bool):
+            raise ValueError(
+                f"kernel_fallback must be a bool or None, got "
+                f"{kernel_fallback!r}")
+        updates["kernel_fallback"] = kernel_fallback
     return _ConfigureContext(_config.set_overrides(updates))
 
 
@@ -343,15 +432,22 @@ def metrics() -> dict:
 
     ``{"counters": {name: {labels: value}}, "gauges": ...,
     "histograms": {name: {labels: {count/sum/min/max/p50/p95/p99}}},
-    "caches": cache_stats()}`` -- JSON-serializable, so serving loops
-    and CI can dump it as an artifact.  Dispatch/span/latency series
-    only populate while ``configure(observability=True)``; the
-    ``retraces_total`` counter ticks regardless (the runtime
-    zero-retrace guard, see repro/obs/retrace.py)."""
+    "caches": cache_stats(), "breaker": ...}`` -- JSON-serializable, so
+    serving loops and CI can dump it as an artifact.  Dispatch/span/
+    latency series only populate while ``configure(observability=True)``;
+    the ``retraces_total`` counter and the resilience series
+    (``fallback_total`` / ``shed_total`` / ``deadline_miss_total`` /
+    ``breaker_state`` / ``selfcheck_failures_total``) tick regardless
+    (runtime contracts, not debug detail -- see repro/obs/retrace.py and
+    repro/resilience/).  ``breaker`` is the circuit-breaker snapshot:
+    every quarantined (op, shape-bucket, backend) key with its state and
+    time-to-retry, plus any forced-open patterns."""
     from repro.obs import metrics as _om
+    from repro.resilience.breaker import BREAKER as _breaker
 
     snap = _om.REGISTRY.snapshot()
     snap["caches"] = cache_stats()
+    snap["breaker"] = _breaker.snapshot()
     return snap
 
 

@@ -26,14 +26,21 @@ import os
 import warnings
 
 OVERRIDE_NAMES = ("mul_method", "div_method", "modexp_backend", "autotune",
-                  "ntt_cache_entries", "observability", "on_retrace")
+                  "ntt_cache_entries", "observability", "on_retrace",
+                  "selfcheck", "kernel_fallback")
 
-# ntt_cache_entries / observability / on_retrace have no env aliases:
-# they never existed as REPRO_* vars, so there is no legacy spelling to
-# keep working.  ``observability`` is the repro.obs master switch
-# (dispatch trace + spans + engine metric ticking); ``on_retrace``
-# picks the retrace-alarm policy ("ignore" / "warn" / "raise", see
-# repro/obs/retrace.py -- the retrace COUNTER ticks regardless).
+# ntt_cache_entries / observability / on_retrace / selfcheck /
+# kernel_fallback have no env aliases: they never existed as REPRO_*
+# vars, so there is no legacy spelling to keep working.
+# ``observability`` is the repro.obs master switch (dispatch trace +
+# spans + engine metric ticking); ``on_retrace`` picks the
+# retrace-alarm policy ("ignore" / "warn" / "raise", see
+# repro/obs/retrace.py -- the retrace COUNTER ticks regardless);
+# ``selfcheck`` arms residue/witness result verification (None/False
+# off, "warn" / "raise" policies, see repro/resilience/selfcheck.py);
+# ``kernel_fallback`` gates degradation through the guarded kernel
+# tiers (None/True degrade, False strict -- first failure propagates,
+# see repro/resilience/guard.py).
 ENV_ALIASES = {
     "mul_method": "REPRO_MUL_BACKEND",
     "div_method": "REPRO_DIV_BACKEND",

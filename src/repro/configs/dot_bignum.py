@@ -158,6 +158,14 @@ class ServeConfig:
     fused ladder runs in its MODEXP_DISPATCH.fused_min_batch regime --
     and ``max_wait_s`` bounds how long a lone request waits for
     batchmates before a deadline flush serves a partial (padded) batch.
+
+    The fault-tolerance knobs (PR 9): ``max_queue`` is the admission
+    bound -- arrivals beyond that many queued requests are SHED at
+    submit (completed immediately with ``shed=True``, never silently
+    dropped) so a burst degrades to bounded rejections instead of
+    unbounded latency; ``max_retries`` / ``retry_backoff_s`` bound the
+    retry loop a transiently-failing flush gets before the engine
+    degrades that bucket to the next backend tier.
     """
 
     bucket_bits: Tuple[int, ...] = (
@@ -166,6 +174,9 @@ class ServeConfig:
         16, 32, 64, 128, 256, 512, 1024, 2048, 4096, 8192)
     slots: int = 8                    # >= MODEXP_DISPATCH.fused_min_batch
     max_wait_s: float = 0.05          # deadline-flush bound per request
+    max_queue: int = 1024             # admission bound (shed beyond this)
+    max_retries: int = 2              # flush retries before degrading
+    retry_backoff_s: float = 0.0      # base of the exponential backoff
 
 
 SERVE = ServeConfig()

@@ -515,13 +515,18 @@ def divmod_digits(a: jax.Array, b: jax.Array,
         method = "recip"
     if method == "schoolbook":
         from repro.kernels.dot_div import ops as _dops
+        from repro.resilience import guard as _guard
         a2 = jnp.asarray(a, U32)
         b2 = jnp.asarray(b, U32)
         lead = jnp.broadcast_shapes(a2.shape[:-1], b2.shape[:-1])
         na, nb = a2.shape[-1], b2.shape[-1]
         a2 = jnp.broadcast_to(a2, lead + (na,)).reshape((-1, na))
         b2 = jnp.broadcast_to(b2, lead + (nb,)).reshape((-1, nb))
-        q, r = _dops.dot_divmod_digits(a2, b2)
+        q, r = _guard.run("div", na * digit_bits, [
+            ("pallas", lambda: _dops.dot_divmod_digits(a2, b2)),
+            ("jnp", lambda: divmod_recip_digits(a2, b2, digit_bits,
+                                                b_const=b_const)),
+        ])
         return q.reshape(lead + (na,)), r.reshape(lead + (nb,))
     if method != "recip":
         raise ValueError(

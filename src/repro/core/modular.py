@@ -375,12 +375,16 @@ def mont_mul(a: jax.Array, b: jax.Array, ctx: MontCtx, lazy: bool = True,
         return _mont_mul_jnp(a, b, ctx, lazy)
     if backend == "pallas":
         from repro.kernels.dot_modmul import ops as _mops
+        from repro.resilience import guard as _guard
         a = jnp.asarray(a, U32)
         b = jnp.asarray(b, U32)
         shape = jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1]) + (ctx.m,)
         a2, batch_shape = _flatten_batch(jnp.broadcast_to(a, shape), ctx.m)
         b2, _ = _flatten_batch(jnp.broadcast_to(b, shape), ctx.m)
-        out = _mops.dot_mont_mul(a2, b2, ctx)
+        out = _guard.run("montmul", ctx.m * DIGIT_BITS, [
+            ("pallas", lambda: _mops.dot_mont_mul(a2, b2, ctx)),
+            ("jnp", lambda: _mont_mul_jnp(a2, b2, ctx, lazy)),
+        ])
         return out.reshape(batch_shape + (ctx.m,))
     return _mont_mul_reference(a, b, ctx)
 
@@ -422,13 +426,17 @@ def mod_mul(a: jax.Array, b: jax.Array, ctx,
         return barrett_mod_mul(a, b, ctx)
     if backend == "barrett_fused":
         from repro.kernels.dot_modmul import ops as _mops
+        from repro.resilience import guard as _guard
         bctx = _as_barrett(ctx)
         a = jnp.asarray(a, U32)
         b = jnp.asarray(b, U32)
         shape = jnp.broadcast_shapes(a.shape[:-1], b.shape[:-1]) + (bctx.m,)
         a2, batch_shape = _flatten_batch(jnp.broadcast_to(a, shape), bctx.m)
         b2, _ = _flatten_batch(jnp.broadcast_to(b, shape), bctx.m)
-        out = _mops.dot_barrett_mul(a2, b2, bctx)
+        out = _guard.run("modmul", bctx.m * DIGIT_BITS, [
+            ("barrett_fused", lambda: _mops.dot_barrett_mul(a2, b2, bctx)),
+            ("barrett", lambda: barrett_mod_mul(a2, b2, bctx)),
+        ])
         return out.reshape(batch_shape + (bctx.m,))
     if backend == "reference" and isinstance(ctx, BarrettCtx):
         return _mod_mul_reference(a, b, ctx)    # no Montgomery form exists
@@ -537,6 +545,17 @@ def _mod_exp_reference(base, exp_bits, ctx: MontCtx) -> jax.Array:
     return jnp.asarray(out.reshape(batch_shape + (ctx.m,)))
 
 
+def _mod_exp_reference_cb(b2: jax.Array, eb: jax.Array, ctx) -> jax.Array:
+    """The host oracle as a jit-safe tier: the guarded dispatchers run at
+    trace time, where b2/eb are tracers, so the python-int recompute is
+    deferred to runtime via pure_callback."""
+    def _host(base_np, eb_np):
+        return np.asarray(_mod_exp_reference(base_np, eb_np, ctx),
+                          np.uint32)
+    shape = jax.ShapeDtypeStruct(b2.shape[:-1] + (ctx.m,), np.uint32)
+    return jax.pure_callback(_host, shape, b2, eb)
+
+
 def select_modexp_backend(nbits: int, batch: int = 1, ebits: int = 0,
                           ctx=None) -> str:
     """Batch-aware modexp dispatch (configs/dot_bignum.MODEXP_DISPATCH),
@@ -608,35 +627,39 @@ def mod_exp(base: jax.Array, exp_bits: jax.Array, ctx,
         backend = _resolve_backend(backend, ctx)
     if backend == "barrett":
         return _barrett_mod_exp(base, exp_bits, ctx, window)
-    if backend == "barrett_fused":
-        from repro.kernels.dot_modmul import ops as _mops
-        bctx = _as_barrett(ctx)
-        base = jnp.asarray(base, U32)
-        shape = jnp.broadcast_shapes(
-            base.shape[:-1], eb.shape[:-1]) + (bctx.m,)
-        b2, batch_shape = _flatten_batch(
-            jnp.broadcast_to(base, shape), bctx.m)
-        if eb.ndim > 1:
-            eb = jnp.broadcast_to(
-                eb, batch_shape + (eb.shape[-1],)).reshape(-1, eb.shape[-1])
-        out = _mops.dot_barrett_mod_exp(b2, eb, bctx, window=window)
-        return out.reshape(batch_shape + (bctx.m,))
     if backend == "jnp":
         return _mod_exp_jnp(base, exp_bits, ctx, lazy, window)
-    if backend == "pallas":
+    if backend in ("pallas", "barrett_fused"):
         from repro.kernels.dot_modmul import ops as _mops
+        from repro.resilience import guard as _guard
+        kctx = _as_barrett(ctx) if backend == "barrett_fused" else ctx
         base = jnp.asarray(base, U32)
         # broadcast BOTH operands to the joint batch shape before
         # flattening (shared base x per-lane exponents and vice versa)
         shape = jnp.broadcast_shapes(
-            base.shape[:-1], eb.shape[:-1]) + (ctx.m,)
+            base.shape[:-1], eb.shape[:-1]) + (kctx.m,)
         b2, batch_shape = _flatten_batch(
-            jnp.broadcast_to(base, shape), ctx.m)
+            jnp.broadcast_to(base, shape), kctx.m)
         if eb.ndim > 1:
             eb = jnp.broadcast_to(
                 eb, batch_shape + (eb.shape[-1],)).reshape(-1, eb.shape[-1])
-        out = _mops.dot_mod_exp(b2, eb, ctx, window=window)
-        return out.reshape(batch_shape + (ctx.m,))
+        eb2 = eb
+        if backend == "barrett_fused":
+            tiers = [
+                ("barrett_fused", lambda: _mops.dot_barrett_mod_exp(
+                    b2, eb2, kctx, window=window)),
+                ("barrett", lambda: _barrett_mod_exp(b2, eb2, kctx, window)),
+                ("reference", lambda: _mod_exp_reference_cb(b2, eb2, kctx)),
+            ]
+        else:
+            tiers = [
+                ("pallas", lambda: _mops.dot_mod_exp(
+                    b2, eb2, kctx, window=window)),
+                ("jnp", lambda: _mod_exp_jnp(b2, eb2, kctx, lazy, window)),
+                ("reference", lambda: _mod_exp_reference_cb(b2, eb2, kctx)),
+            ]
+        out = _guard.run("modexp", kctx.m * DIGIT_BITS, tiers)
+        return out.reshape(batch_shape + (kctx.m,))
     return _mod_exp_reference(base, exp_bits, ctx)
 
 

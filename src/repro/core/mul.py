@@ -451,23 +451,47 @@ def mul_limbs32(a_limbs: jax.Array, b_limbs: jax.Array,
         # kernel entry points are 2-D (batch, m); imported lazily because
         # the ops modules import core.mul at module level (cycle) -- core
         # depends statically only on the pure-jnp kernels/common helpers
+        from repro.resilience import guard as _guard
+
         a2, lead = _flatten_leading(jnp.asarray(a_limbs, U32))
         b2, _ = _flatten_leading(jnp.asarray(b_limbs, U32))
-        if method == "pallas":
-            from repro.kernels.dot_mul import ops as _k
-            out = _k.dot_mul_limbs32(a2, b2)
-        elif method == "pallas_mxu":
-            from repro.kernels.mxu_mul import ops as _k
-            out = _k.mxu_mul_limbs32(a2, b2)
-        elif method == "ntt":
-            from repro.kernels.ntt_mul import ops as _k
-            if b_const is not None and _k.operand_cache_capacity() > 0:
-                out = _k.ntt_mul_limbs32_prepared(a2, b_const)
-            else:
-                out = _k.ntt_mul_limbs32(a2, b2)
-        else:
+
+        def _kernel_tier():
+            if method == "pallas":
+                from repro.kernels.dot_mul import ops as _k
+                return _k.dot_mul_limbs32(a2, b2)
+            if method == "pallas_mxu":
+                from repro.kernels.mxu_mul import ops as _k
+                return _k.mxu_mul_limbs32(a2, b2)
+            if method == "ntt":
+                from repro.kernels.ntt_mul import ops as _k
+                if b_const is not None and _k.operand_cache_capacity() > 0:
+                    return _k.ntt_mul_limbs32_prepared(a2, b_const)
+                return _k.ntt_mul_limbs32(a2, b2)
             from repro.kernels.kara_mul import ops as _k
-            out = _k.kara_mul_limbs32(a2, b2)
+            return _k.kara_mul_limbs32(a2, b2)
+
+        # the jnp fallback mirrors the kernel's algorithmic family: the
+        # single-launch VnC / Toeplitz kernels degrade to the jnp VnC
+        # composition, the fused Karatsuba / NTT tiers to jnp Karatsuba
+        # (quadratic "dot" at those widths would be the real outage)
+        fb = "dot" if method in ("pallas", "pallas_mxu") else "karatsuba"
+
+        def _reference_tier():
+            def _host(a_np, b_np):
+                from repro.core import limbs as _L
+                prods = [x * y for x, y in
+                         zip(_L.batch_to_ints(np.asarray(a_np)),
+                             _L.batch_to_ints(np.asarray(b_np)))]
+                return _L.ints_to_batch(prods, 2 * m)
+            shape = jax.ShapeDtypeStruct((a2.shape[0], 2 * m), np.uint32)
+            return jax.pure_callback(_host, shape, a2, b2, vmap_method="sequential")
+
+        out = _guard.run("mul", 32 * m, [
+            (method, _kernel_tier),
+            (fb, lambda: mul_limbs32(a2, b2, method=fb)),
+            ("reference", _reference_tier),
+        ])
         return out.reshape(lead + (2 * m,))
     a_d = split_digits(a_limbs, DIGIT_BITS)
     b_d = split_digits(b_limbs, DIGIT_BITS)

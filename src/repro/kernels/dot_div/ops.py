@@ -25,6 +25,7 @@ from repro.core import div as coredivi
 from repro.kernels.common import autotune, tiling
 from repro.kernels.common.runtime import auto_interpret as _auto_interpret
 from repro.kernels.dot_div import kernel as K
+from repro.resilience import inject as _inject
 
 U32 = jnp.uint32
 DIGIT_BITS = 16
@@ -59,6 +60,7 @@ def dot_divmod_digits(a_digits, b_digits, interpret=None):
     use the reciprocal path (core/div) for operand sizes above the
     DIV_DISPATCH threshold.
     """
+    _inject.fire("kernels/dot_div")
     a = jnp.asarray(a_digits, U32)
     b = jnp.asarray(b_digits, U32)
     batch, na = a.shape

@@ -28,6 +28,7 @@ from repro.kernels.common import autotune, tiling
 from repro.kernels.common.runtime import auto_interpret as _auto_interpret
 from repro.kernels.common.windows import exponent_windows
 from repro.kernels.dot_modmul import kernel as K
+from repro.resilience import inject as _inject
 
 U32 = jnp.uint32
 
@@ -72,6 +73,7 @@ def _ladder_call(base, wins, n_row, r2_row, one_row, tb: int, n0p: int,
 
 def dot_mont_mul(a, b, ctx, interpret=None):
     """(batch, m) digit arrays x2 -> (batch, m) of a*b*R^{-1} mod n."""
+    _inject.fire("kernels/dot_modmul/mont_mul")
     assert ctx.m <= MAX_DIGITS, "lazy digits overflow uint32 beyond 2**13"
     a = jnp.asarray(a, U32)
     b = jnp.asarray(b, U32)
@@ -121,6 +123,7 @@ def dot_barrett_mul(a, b, ctx, interpret=None):
     ``ctx`` is duck-typed on ``m / n_digits / mu_digits``
     (core.modular.BarrettCtx); n and mu ride in as runtime rows, so one
     compiled kernel serves every same-width modulus."""
+    _inject.fire("kernels/dot_modmul/barrett_mul")
     assert ctx.m <= MAX_DIGITS, "lazy digits overflow uint32 beyond 2**13"
     a = jnp.asarray(a, U32)
     b = jnp.asarray(b, U32)
@@ -143,6 +146,7 @@ def dot_barrett_mod_exp(base, exp_bits, ctx, window=None, interpret=None):
     """Fused full-ladder windowed modexp via Barrett reduction: the even-
     modulus twin of dot_mod_exp (same one-launch constant-time schedule,
     no Montgomery entry/exit).  ``ctx`` duck-typed as dot_barrett_mul."""
+    _inject.fire("kernels/dot_modmul/barrett_mod_exp")
     assert ctx.m <= MAX_DIGITS, "lazy digits overflow uint32 beyond 2**13"
     base = jnp.asarray(base, U32)
     eb = jnp.asarray(exp_bits, U32)
@@ -171,6 +175,7 @@ def dot_mod_exp(base, exp_bits, ctx, window=None, interpret=None):
     ``window`` overrides the config-picked window size w.  Constant-time
     in structure: exponent windows feed one-hot selects, never branches.
     """
+    _inject.fire("kernels/dot_modmul/mod_exp")
     assert ctx.m <= MAX_DIGITS, "lazy digits overflow uint32 beyond 2**13"
     base = jnp.asarray(base, U32)
     eb = jnp.asarray(exp_bits, U32)

@@ -17,6 +17,7 @@ from repro.core import mul as coremul
 from repro.kernels.common import autotune, tiling
 from repro.kernels.common.runtime import auto_interpret as _auto_interpret
 from repro.kernels.dot_mul import kernel as K
+from repro.resilience import inject as _inject
 
 U32 = jnp.uint32
 
@@ -55,6 +56,7 @@ def dot_mul_digits(a_digits, b_digits, interpret=None):
 def dot_mul_limbs32(a_limbs, b_limbs, interpret=None):
     """(batch, m) uint32 saturated limbs -> (batch, 2m) limbs (full product),
     with radix conversion at entry/exit (paper sec 3.3, 4x4 routine)."""
+    _inject.fire("kernels/dot_mul")
     m = a_limbs.shape[-1]
     a_d = coremul.split_digits(jnp.asarray(a_limbs, U32), 16)
     b_d = coremul.split_digits(jnp.asarray(b_limbs, U32), 16)

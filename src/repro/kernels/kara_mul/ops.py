@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels.common import autotune, tiling
 from repro.kernels.common.runtime import auto_interpret as _auto_interpret
 from repro.kernels.kara_mul import kernel as K
+from repro.resilience import inject as _inject
 
 U32 = jnp.uint32
 
@@ -66,6 +67,7 @@ def kara_mul_limbs32(a_limbs, b_limbs, interpret=None,
                      threshold: int = K.DEFAULT_THRESHOLD):
     """(batch, m) uint32 saturated limbs -> (batch, 2m) limbs (full
     product), radix-converted at entry/exit."""
+    _inject.fire("kernels/kara_mul")
     from repro.core import mul as coremul
     m = a_limbs.shape[-1]
     a_d = coremul.split_digits(jnp.asarray(a_limbs, U32), 16)

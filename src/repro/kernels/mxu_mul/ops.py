@@ -16,6 +16,7 @@ import jax.numpy as jnp
 from repro.kernels.common import autotune, tiling
 from repro.kernels.common.runtime import auto_interpret as _auto_interpret
 from repro.kernels.mxu_mul import kernel as K
+from repro.resilience import inject as _inject
 
 U32 = jnp.uint32
 I8 = jnp.int8
@@ -56,6 +57,7 @@ def mxu_mul_digits(a_digits, b_digits, interpret=None):
 def mxu_mul_limbs32(a_limbs, b_limbs, interpret=None):
     """(batch, m) uint32 saturated limbs -> (batch, 2m) limbs (full
     product), radix-converted 32 <-> 7 at entry/exit."""
+    _inject.fire("kernels/mxu_mul")
     from repro.core import mul as coremul
     m = a_limbs.shape[-1]
     a_d = coremul.split_digits(jnp.asarray(a_limbs, U32), K.MXU_DIGIT_BITS)

@@ -37,6 +37,7 @@ from repro.kernels.common import autotune, tiling
 from repro.kernels.common.carry import normalize_static
 from repro.kernels.common.runtime import auto_interpret as _auto_interpret
 from repro.kernels.ntt_mul import kernel as K
+from repro.resilience import inject as _inject
 
 U32 = jnp.uint32
 R = 1 << K.R_BITS
@@ -333,6 +334,7 @@ def ntt_mul_limbs32(a_limbs, b_limbs, nprimes: int | None = None,
                     interpret=None):
     """(batch, m) uint32 saturated limbs x2 -> (batch, 2m) limbs (full
     product), radix-converted at entry/exit (paper sec 3.3)."""
+    _inject.fire("kernels/ntt_mul")
     from repro.core import mul as coremul
     m = a_limbs.shape[-1]
     a_d = coremul.split_digits(jnp.asarray(a_limbs, U32), DIGIT_BITS)
@@ -389,6 +391,7 @@ def ntt_mul_limbs32_prepared(a_limbs, b_value: int,
                              nprimes: int | None = None, interpret=None):
     """32-bit limb twin of ntt_mul_digits_prepared: (batch, m) limbs x a
     host-known value < 2**(32m) -> (batch, 2m) limbs."""
+    _inject.fire("kernels/ntt_mul")
     from repro.core import mul as coremul
     m = a_limbs.shape[-1]
     a_d = coremul.split_digits(jnp.asarray(a_limbs, U32), DIGIT_BITS)

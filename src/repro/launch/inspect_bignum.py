@@ -136,6 +136,26 @@ def main(argv=None):
             print(line)
 
         snap = api.metrics()
+        print("\n== resilience ==")
+        ctrs = snap["counters"]
+        for name in ("fallback_total", "shed_total",
+                     "deadline_miss_total", "selfcheck_failures_total"):
+            series = ctrs.get(name, {})
+            if not series:
+                print(f"  {name}: (none)")
+                continue
+            for labels, v in series.items():
+                print(f"  {name}{{{labels}}}: {int(v)}")
+        brk = snap.get("breaker", {})
+        for key, st_ in brk.get("keys", {}).items():
+            extra = (f" (retry in {st_['retry_in_s']:.1f}s)"
+                     if st_.get("retry_in_s") else "")
+            print(f"  breaker {key}: {st_['state']}{extra}")
+        for f in brk.get("forced", []):
+            print(f"  breaker forced open: {f}")
+        if not brk.get("keys") and not brk.get("forced"):
+            print("  breaker: all closed")
+
         caches = snap["caches"]
         print("\n== caches ==")
         for name in ("twiddle", "operand", "autotune"):

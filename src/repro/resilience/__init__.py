@@ -1,0 +1,18 @@
+"""Fault-tolerance layer: circuit breaker, guarded tiered dispatch,
+deterministic fault injection, and residue/witness self-checking.
+
+See the module docstrings for the contracts; the serving integration
+lives in serve/bignum_engine.py and the chaos driver in
+launch/chaos_bignum.py.
+"""
+from repro.resilience import guard, inject, selfcheck
+from repro.resilience.breaker import BREAKER, CircuitBreaker, shape_bucket
+
+__all__ = [
+    "BREAKER",
+    "CircuitBreaker",
+    "guard",
+    "inject",
+    "selfcheck",
+    "shape_bucket",
+]

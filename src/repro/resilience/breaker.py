@@ -1,0 +1,179 @@
+"""Process-local circuit breaker for kernel backends.
+
+A breaker key is ``(op, shape-bucket, backend)`` -- the same granularity
+the guarded executor (resilience/guard.py) dispatches at: one failing
+shape/backend combination must not poison other shapes of the same
+kernel, and one failing kernel must not poison the jnp tiers.
+
+State machine (per key):
+
+  * ``closed``    -- healthy; calls flow through.
+  * ``open``      -- the backend failed for this key; calls are skipped
+    (the guard falls straight to the next tier, ticking
+    ``fallback_total{reason="quarantined"}``) until ``cooldown_s``
+    elapses.
+  * ``half_open`` -- cooldown expired; ONE probe call is allowed
+    through.  Success closes the key; failure re-opens it for another
+    cooldown.
+
+The breaker opens on the FIRST failure: a Pallas compile / lowering /
+VMEM failure is deterministic for a given shape, so retrying it per
+request would pay the failed-compile latency on every call.  The timed
+half-open probe exists for the transient minority (driver hiccups,
+memory pressure from a neighbor).
+
+``force_open(...)`` pins keys open by op/backend pattern regardless of
+history -- the benchmark/ops knob for measuring the degraded tier
+without manufacturing a real failure (see benchmarks/bench_serve.py).
+
+Transitions mirror into the ``breaker_state`` gauge (0 closed /
+1 half_open / 2 open) so the observability surface from PR 8 covers
+quarantine decisions; like ``retraces_total``, the gauge is written
+even with observability off -- a quarantined kernel is an operational
+signal, not a debug detail.
+
+Import-light (stdlib + repro.obs.metrics): the core dispatchers consult
+the breaker from inside jit traces.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, Optional, Tuple
+
+from repro.obs import metrics as _metrics
+
+STATES = ("closed", "half_open", "open")
+STATE_VALUES = {name: i for i, name in enumerate(STATES)}
+
+METRIC = "breaker_state"
+
+DEFAULT_COOLDOWN_S = 30.0
+
+BreakerKey = Tuple[str, int, str]
+
+
+def shape_bucket(nbits: int) -> int:
+    """Power-of-two shape bucket >= nbits (floor 32): breaker state is
+    per size regime, not per exact width, matching how compile/VMEM
+    failures generalize (a 1040-bit overflow will also hit 1024)."""
+    b = 32
+    while b < nbits:
+        b *= 2
+    return b
+
+
+class CircuitBreaker:
+    """Keyed breaker; ``clock`` is injectable for deterministic tests."""
+
+    def __init__(self, cooldown_s: float = DEFAULT_COOLDOWN_S,
+                 clock=time.monotonic):
+        self.cooldown_s = cooldown_s
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._open_until: Dict[BreakerKey, float] = {}
+        self._probing: set = set()
+        self._forced: list = []          # (op or None, backend or None)
+
+    @staticmethod
+    def key(op: str, nbits: int, backend: str) -> BreakerKey:
+        return (op, shape_bucket(nbits), backend)
+
+    # -- state ------------------------------------------------------------
+
+    def _forced_open(self, op: str, backend: str) -> bool:
+        return any((fo is None or fo == op) and (fb is None or fb == backend)
+                   for fo, fb in self._forced)
+
+    def state(self, op: str, nbits: int, backend: str) -> str:
+        with self._lock:
+            if self._forced_open(op, backend):
+                return "open"
+            k = self.key(op, nbits, backend)
+            until = self._open_until.get(k)
+            if until is None:
+                return "closed"
+            if k in self._probing or self._clock() >= until:
+                return "half_open"
+            return "open"
+
+    def allow(self, op: str, nbits: int, backend: str) -> bool:
+        """True when a call to this key may proceed.  In ``half_open``
+        exactly one caller gets True (the probe); the key stays blocked
+        for everyone else until record_success / record_failure."""
+        with self._lock:
+            if self._forced_open(op, backend):
+                return False
+            k = self.key(op, nbits, backend)
+            until = self._open_until.get(k)
+            if until is None:
+                return True
+            if k in self._probing:
+                return False                 # probe in flight
+            if self._clock() >= until:
+                self._probing.add(k)
+                self._set_gauge(k, "half_open")
+                return True
+            return False
+
+    def record_failure(self, op: str, nbits: int, backend: str) -> None:
+        with self._lock:
+            k = self.key(op, nbits, backend)
+            self._probing.discard(k)
+            self._open_until[k] = self._clock() + self.cooldown_s
+            self._set_gauge(k, "open")
+
+    def record_success(self, op: str, nbits: int, backend: str) -> None:
+        with self._lock:
+            k = self.key(op, nbits, backend)
+            self._probing.discard(k)
+            if k in self._open_until:
+                del self._open_until[k]
+                self._set_gauge(k, "closed")
+
+    # -- ops knobs --------------------------------------------------------
+
+    def force_open(self, *, op: Optional[str] = None,
+                   backend: Optional[str] = None) -> None:
+        """Pin every key matching (op, backend) open (None: wildcard)
+        until ``clear_forced()`` -- measure the fallback tier on demand."""
+        with self._lock:
+            self._forced.append((op, backend))
+
+    def clear_forced(self) -> None:
+        with self._lock:
+            self._forced.clear()
+
+    def reset(self) -> None:
+        with self._lock:
+            self._open_until.clear()
+            self._probing.clear()
+            self._forced.clear()
+
+    def snapshot(self) -> dict:
+        """{"op/bits/backend": {"state": ..., "retry_in_s": ...}} for
+        every non-closed key, plus the active forced patterns."""
+        with self._lock:
+            now = self._clock()
+            out = {}
+            for k, until in sorted(self._open_until.items()):
+                op, bits, backend = k
+                state = ("half_open" if k in self._probing or now >= until
+                         else "open")
+                out[f"{op}/{bits}/{backend}"] = {
+                    "state": state,
+                    "retry_in_s": max(0.0, round(until - now, 3)),
+                }
+            return {"keys": out,
+                    "forced": [{"op": fo, "backend": fb}
+                               for fo, fb in self._forced]}
+
+    def _set_gauge(self, k: BreakerKey, state: str) -> None:
+        op, bits, backend = k
+        _metrics.REGISTRY.gauge(
+            METRIC, "kernel quarantine state "
+                    "(0 closed / 1 half_open / 2 open)").set(
+            STATE_VALUES[state], op=op, bits=bits, backend=backend)
+
+
+BREAKER = CircuitBreaker()

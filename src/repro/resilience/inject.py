@@ -1,0 +1,145 @@
+"""Deterministic fault injection: the chaos harness's write side.
+
+Every degradation path in the stack (guarded kernel dispatch, engine
+flush retry, residue self-checking) is DRIVEN by this module in tests
+and CI rather than trusted: ``launch/chaos_bignum.py`` installs specs,
+replays a request trace, and compares the resilience counters against
+``log()`` -- the realized injections -- exactly.
+
+Determinism model: injections do NOT share one RNG stream (interleaving
+would make realized faults depend on unrelated call order).  Each spec
+keeps its own per-site fire counter; a spec fires when its counter hits
+the ``every`` cadence, capped at ``count`` total fires, and any
+randomness inside an event (which lane/limb/bit a corruption flips)
+comes from a counter-indexed seeded generator -- same seed + same call
+sequence => byte-identical faults and an identical ``log()``.
+
+Spec kinds:
+
+  * ``compile_fail`` / ``flush_error`` -- raise ``InjectedFault`` at a
+    matching ``fire()`` site (kernel entries / engine flush),
+  * ``latency``     -- sleep ``delay_s`` at a matching ``fire()`` site,
+  * ``corrupt``     -- flip one bit of one real lane in a result block
+    passed through ``corrupt()`` (the engine calls it on every flush
+    output, so an installed spec simulates a device fault downstream of
+    a correct kernel -- exactly what residue self-checking must catch).
+
+Sites are matched by substring so one spec can cover a family
+(``site="modexp"`` hits "modexp/pallas" and "modexp/barrett_fused").
+Everything is a no-op (one truthiness check) when no specs are
+installed; stdlib + numpy only, so kernel entry points can call
+``fire()`` without import-graph consequences.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import zlib
+from typing import List, Optional
+
+import numpy as np
+
+KINDS = ("compile_fail", "flush_error", "latency", "corrupt")
+
+
+class InjectedFault(RuntimeError):
+    """A deliberately injected failure (never raised outside chaos)."""
+
+
+@dataclasses.dataclass
+class _Spec:
+    kind: str
+    site: str = ""                  # substring match ("" matches all)
+    every: int = 1                  # fire on every N-th matching call
+    count: Optional[int] = None     # cap on total fires (None: unlimited)
+    delay_s: float = 0.0            # latency kind only
+    seed: int = 0
+    calls: int = 0
+    fires: int = 0
+
+
+_specs: List[_Spec] = []
+_log: List[dict] = []
+
+
+def install(kind: str, site: str = "", *, every: int = 1,
+            count: Optional[int] = None, delay_s: float = 0.0,
+            seed: int = 0) -> None:
+    """Install one fault spec (see module docstring for kinds)."""
+    if kind not in KINDS:
+        raise ValueError(f"unknown inject kind {kind!r}; choose from {KINDS}")
+    if every < 1:
+        raise ValueError(f"inject every must be >= 1, got {every}")
+    _specs.append(_Spec(kind=kind, site=site, every=every, count=count,
+                        delay_s=delay_s, seed=seed))
+
+
+def clear() -> None:
+    """Remove every spec and the realized-injection log."""
+    _specs.clear()
+    _log.clear()
+
+
+def active() -> bool:
+    return bool(_specs)
+
+
+def log() -> List[dict]:
+    """Realized injections, in order: the plan the chaos gates compare
+    the resilience counters against."""
+    return list(_log)
+
+
+def _due(spec: _Spec) -> bool:
+    """Advance the spec's call counter; True when this call fires."""
+    spec.calls += 1
+    if spec.count is not None and spec.fires >= spec.count:
+        return False
+    if spec.calls % spec.every:
+        return False
+    spec.fires += 1
+    return True
+
+
+def fire(site: str) -> None:
+    """Chaos hook at an execution site: raises / sleeps per any matching
+    non-corrupt spec.  Call sites: kernel op entries ("kernels/<pkg>"),
+    the guarded executor ("<op>/<backend>"), and the engine flush loop
+    ("serve/flush/<op>")."""
+    if not _specs:
+        return
+    for spec in _specs:
+        if spec.kind == "corrupt" or spec.site not in site:
+            continue
+        if not _due(spec):
+            continue
+        _log.append({"kind": spec.kind, "site": site, "seq": spec.fires})
+        if spec.kind == "latency":
+            time.sleep(spec.delay_s)
+        else:
+            raise InjectedFault(
+                f"injected {spec.kind} at {site} (fire #{spec.fires})")
+
+
+def corrupt(site: str, block: np.ndarray, n_real: int) -> np.ndarray:
+    """Chaos hook on a result block: flips one bit of one REAL lane per
+    matching due ``corrupt`` spec (lane/limb/bit drawn from a
+    counter-indexed seeded generator).  Returns the (possibly copied
+    and corrupted) block; identity when nothing fires."""
+    if not _specs or n_real < 1:
+        return block
+    for spec in _specs:
+        if spec.kind != "corrupt" or spec.site not in site:
+            continue
+        if not _due(spec):
+            continue
+        rng = np.random.default_rng(
+            (spec.seed << 20) ^ zlib.crc32(site.encode()) ^ spec.fires)
+        lane = int(rng.integers(0, n_real))
+        limb = int(rng.integers(0, block.shape[-1]))
+        bit = int(rng.integers(0, 32))
+        block = np.array(block, copy=True)
+        block[lane, limb] ^= np.uint32(1 << bit)
+        _log.append({"kind": "corrupt", "site": site, "seq": spec.fires,
+                     "lane": lane, "limb": limb, "bit": bit})
+    return block

@@ -1,0 +1,176 @@
+"""Residue self-checking: cheap algebraic verification of arithmetic
+results, opt-in via ``repro.api.configure(selfcheck="warn"|"raise")``.
+
+The check folds each lane's inputs and outputs modulo the Fermat prime
+p = 2**16 + 1 and tests the identity the operation must satisfy:
+
+  * multiply:  res(a) * res(b)          == res(a*b)   (mod p)
+  * divmod:    res(q) * res(b) + res(r) == res(a)     (mod p)
+
+Folding a little-endian 32-bit limb array mod p is ONE vector op:
+2**16 == -1 (mod p) makes 2**32 == 1, so each limb contributes
+``lo16 - hi16`` and the residue is a plain alternating digit sum --
+exactly the digit-fold trick the paper family uses for casting-out
+checks, in the radix this repo already stores.  (The issue sketch says
+"a 30-bit prime"; on the uint32-only VPU a 30-bit prime would need
+64-bit products plus a Montgomery fold per step, so the Fermat prime's
+free fold is the engineering choice: a random single-bit corruption
+escapes one check with probability 1/p < 2**-16, and the serving
+engine's witness checks below close the gap to zero for the crypto
+ops.)
+
+Modular exponentiation has NO such residue identity (the quotient of
+the reduction is not available, and sound countermeasures like
+Blomer-Otto-Seifert's widened modulus change the operand layout), so
+the serving engine verifies crypto results per lane with host
+witnesses instead -- exact, and cheap where it matters:
+
+  * rsa_sign / rsa_decrypt: the classic RSA fault countermeasure --
+    re-encrypt with the PUBLIC exponent (pow(result, e, n), 17 bits
+    for e = 65537) and compare with the input;
+  * rsa_verify / mod_exp: recompute with python-int pow (rsa_verify's
+    public exponent is short; raw mod_exp pays a full host ladder,
+    the documented cost of checking an op with no public inverse).
+
+A failed check ticks ``selfcheck_failures_total{op,...}`` (always, like
+``retraces_total``) and then applies the policy: "warn" emits a
+``SelfCheckWarning``, "raise" raises ``SelfCheckError``.  The engine
+additionally REPAIRS failed lanes from the witness (reference tier)
+before applying the policy, so served results stay bit-exact either
+way -- see serve/bignum_engine.py.
+"""
+from __future__ import annotations
+
+import warnings
+
+import numpy as np
+
+from repro import config as _config
+from repro.obs import metrics as _metrics
+
+P = (1 << 16) + 1                    # Fermat prime F4: 2**16 == -1 (mod P)
+
+POLICIES = ("warn", "raise")
+
+METRIC = "selfcheck_failures_total"
+_HELP = "residue/witness self-check failures by op"
+
+
+class SelfCheckWarning(UserWarning):
+    """A self-check mismatch under policy "warn"."""
+
+
+class SelfCheckError(RuntimeError):
+    """A self-check mismatch under policy "raise"."""
+
+
+def policy():
+    """The active selfcheck policy, or None when disabled."""
+    value = _config.get_override("selfcheck")
+    if value in (None, False):
+        return None
+    return str(value)
+
+
+def enabled() -> bool:
+    return policy() is not None
+
+
+# ---------------------------------------------------------------------------
+# residue folds
+# ---------------------------------------------------------------------------
+
+def fold_int(v: int) -> int:
+    return v % P
+
+
+def fold_limbs(arr) -> np.ndarray:
+    """(..., m) uint32 little-endian limbs -> (...,) residues mod P.
+
+    One vectorized pass: limb_i * 2**(32 i) == limb_i (mod P), and each
+    limb splits as lo + 2**16 hi == lo - hi.  Sums stay well inside
+    int64 for any supported width."""
+    a = np.asarray(arr, np.uint32)
+    lo = (a & np.uint32(0xFFFF)).astype(np.int64)
+    hi = (a >> np.uint32(16)).astype(np.int64)
+    return (lo - hi).sum(axis=-1) % P
+
+
+def _any_tracer(*arrays) -> bool:
+    """True when any argument is an abstract jax tracer (the check only
+    runs on concrete values; under jit the caller's own program is the
+    thing being traced and there is nothing to compare host-side)."""
+    import jax
+
+    return any(isinstance(x, jax.core.Tracer) for x in arrays)
+
+
+def report(op: str, n_bad: int, detail: str, **labels) -> None:
+    """Tick the failure counter (always) and apply the policy."""
+    _metrics.REGISTRY.counter(METRIC, _HELP).inc(n_bad, op=op, **labels)
+    msg = (f"selfcheck: {n_bad} {op} lane(s) failed verification "
+           f"({detail})")
+    if policy() == "raise":
+        raise SelfCheckError(msg)
+    warnings.warn(msg, SelfCheckWarning, stacklevel=3)
+
+
+# ---------------------------------------------------------------------------
+# facade-level residue checks (repro.api.mul / repro.api.divmod)
+# ---------------------------------------------------------------------------
+
+def check_mul(a, b, out) -> None:
+    """Verify res(a)*res(b) == res(out) lane-wise; no-op when disabled
+    or while tracing."""
+    if not enabled() or _any_tracer(a, b, out):
+        return
+    ra, rb, ro = fold_limbs(a), fold_limbs(b), fold_limbs(np.asarray(out))
+    bad = int(np.count_nonzero((ra * rb) % P != ro))
+    if bad:
+        report("mul", bad, f"residue product identity mod {P}")
+
+
+def check_divmod(a, b, q, r) -> None:
+    """Verify res(q)*res(b) + res(r) == res(a) lane-wise."""
+    if not enabled() or _any_tracer(a, b, q, r):
+        return
+    ra, rb = fold_limbs(a), fold_limbs(b)
+    rq, rr = fold_limbs(np.asarray(q)), fold_limbs(np.asarray(r))
+    bad = int(np.count_nonzero((rq * rb + rr) % P != ra))
+    if bad:
+        report("divmod", bad, f"residue divmod identity mod {P}")
+
+
+# ---------------------------------------------------------------------------
+# witness checks for the crypto ops (serving engine, per real lane)
+# ---------------------------------------------------------------------------
+
+def verify_lane(op: str, value: int, result: int, *, modulus=None,
+                exponent=None, key=None) -> bool:
+    """True when ``result`` is consistent with ``value`` under ``op``
+    (python-int witnesses; see module docstring for which check is the
+    cheap public-exponent inverse vs a full recompute)."""
+    if op == "mod_exp":
+        return result == pow(value, exponent, modulus)
+    if op == "rsa_sign":
+        return pow(result, key.e, key.n) == value % key.n
+    if op == "rsa_verify":
+        return result == pow(value, key.e, key.n)
+    if op == "rsa_decrypt":
+        return pow(result, key.e, key.n) == value % key.n
+    raise ValueError(f"selfcheck.verify_lane: unknown op {op!r}")
+
+
+def repair_lane(op: str, value: int, *, modulus=None, exponent=None,
+                key=None) -> int:
+    """The reference-tier (python-int) recompute of one lane -- what a
+    failed lane is replaced with."""
+    if op == "mod_exp":
+        return pow(value, exponent, modulus)
+    if op == "rsa_sign":
+        return pow(value % key.n, key.d, key.n)
+    if op == "rsa_verify":
+        return pow(value, key.e, key.n)
+    if op == "rsa_decrypt":
+        return pow(value % key.n, key.d, key.n)
+    raise ValueError(f"selfcheck.repair_lane: unknown op {op!r}")

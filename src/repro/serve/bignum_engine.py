@@ -31,6 +31,36 @@ times, single serial device -- and ``NaiveServer`` / ``replay_naive``
 is the one-request-at-a-time natural-shape baseline the benchmarks
 compare against.
 
+Fault tolerance (PR 9)
+----------------------
+The engine assumes failures and bounds them instead of crashing:
+
+* **Admission control / shedding** -- ``submit`` rejects on arrival
+  (``req.shed = True``, ``shed_total`` ticks, request completes with no
+  result) when the queue exceeds ``ServeConfig.max_queue`` or the
+  oldest deadline has slipped more than ``max_wait_s`` past due, so a
+  burst degrades to bounded rejections, not unbounded latency.
+* **Deadline accounting** -- a request carrying ``sla_s`` that
+  completes later than that ticks ``deadline_miss_total{op,bits}``.
+* **Retry + degrade** -- a flush that raises is retried up to
+  ``max_retries`` (exponential backoff from ``retry_backoff_s``); when
+  retries exhaust, the bucket is DEGRADED one backend tier
+  (auto/pallas -> jnp -> host reference) and re-run, ticking
+  ``fallback_total{op,backend,reason=flush_*}``.  The recompile a
+  degrade forces is expected, so it does not trip the retrace alarm.
+* **Partial-failure warm()** -- a bucket whose warm-up fails degrades
+  the same way instead of failing the whole warm pass; warm is also
+  idempotent per bucket (re-warming is a no-op, not a jit-cache leak).
+* **Graceful shutdown** -- ``close()`` drains pending queues, then
+  marks the engine terminal: submit/warm after close raise a clear
+  RuntimeError instead of leaking state.
+* **Residue self-checking** -- under ``configure(selfcheck=...)``
+  every real lane of every flush is verified against a host witness
+  (public-exponent re-encryption for sign/decrypt, pow() recompute
+  otherwise -- see repro/resilience/selfcheck.py); a corrupted lane is
+  REPAIRED from the witness before results are returned, ticking
+  ``selfcheck_failures_total`` and applying the warn/raise policy.
+
 All arithmetic goes through the ``repro.api`` facade; this module never
 imports the digit-radix internals.
 """
@@ -45,7 +75,11 @@ import numpy as np
 
 from repro import api, obs
 from repro.configs.dot_bignum import SERVE, ServeConfig, quantize_bits
+from repro.obs import metrics as _metrics
 from repro.obs import retrace as _retrace
+from repro.resilience import guard as _guard
+from repro.resilience import inject as _inject
+from repro.resilience import selfcheck as _selfcheck
 
 OPS = ("mod_exp", "rsa_sign", "rsa_verify", "rsa_decrypt")
 
@@ -67,10 +101,12 @@ class BignumRequest:
     modulus: Optional[int] = None
     exponent: Optional[int] = None
     key: Optional[api.RSAKey] = None
+    sla_s: Optional[float] = None       # per-request latency SLA
     arrival: float = 0.0
     deadline: float = 0.0
     completion: Optional[float] = None
     result: Optional[np.ndarray] = None
+    shed: bool = False                  # rejected at admission (no result)
 
     @property
     def latency(self) -> float:
@@ -88,6 +124,11 @@ class EngineStats:
     flush_full: int = 0
     flush_deadline: int = 0
     padded_lanes: int = 0
+    shed: int = 0             # requests rejected at admission
+    retries: int = 0          # flush attempts repeated after a failure
+    degraded: int = 0         # bucket backend-tier demotions
+    deadline_misses: int = 0  # requests completing past their sla_s
+    selfcheck_failures: int = 0   # lanes caught (and repaired) by selfcheck
 
 
 class BignumEngine:
@@ -112,6 +153,10 @@ class BignumEngine:
         # the zero-retrace contract arms once warm() completes: any jit
         # body execution after that is an unexpected retrace
         self._warmed = False
+        self._warmed_keys: set = set()      # warm() idempotence
+        self._degraded: Dict[BucketKey, str] = {}   # bucket -> demoted tier
+        self._expect_trace = False          # a degrade's recompile is legit
+        self._closed = False
 
     # -- bucketing --------------------------------------------------------
 
@@ -146,7 +191,7 @@ class BignumEngine:
             return self._fns[bkey]
         op, nbits, _, _ = bkey
         stats = self.stats
-        backend = self.backend
+        backend = self._degraded.get(bkey, self.backend)
         engine = self
         if op == "mod_exp":
             ctx = self._ctx(sample.modulus, nbits)
@@ -181,8 +226,10 @@ class BignumEngine:
         jit cache misses (fresh XLA traces).  After ``warm()`` has
         completed, any execution here breaks the zero-retrace contract
         -- tick the ``retraces_total`` metric and apply the configured
-        ``on_retrace`` policy (repro/obs/retrace.py)."""
-        if self._warmed:
+        ``on_retrace`` policy (repro/obs/retrace.py).  The one expected
+        post-warm trace is the recompile a backend-tier degrade forces
+        (``_expect_trace``); it is deliberate, not a contract break."""
+        if self._warmed and not self._expect_trace:
             _retrace.alarm("serve", op=op, bits=nbits)
 
     def _execute(self, bkey: BucketKey,
@@ -207,6 +254,83 @@ class BignumEngine:
             out = fn(base)
         return np.asarray(jax.block_until_ready(out))
 
+    # -- degradation ------------------------------------------------------
+
+    def _tier_name(self, bkey: BucketKey) -> str:
+        """Label of the backend tier this bucket currently runs at."""
+        return self._degraded.get(bkey) or self.backend or "auto"
+
+    def _next_tier(self, bkey: BucketKey) -> Optional[str]:
+        """One step down the degradation ladder for this bucket, or
+        None when the bucket already runs at the host-reference floor."""
+        cur = self._degraded.get(bkey)
+        if cur is None:
+            return "reference" if self.backend == "jnp" else "jnp"
+        if cur == "jnp":
+            return "reference"
+        return None
+
+    def _degrade(self, bkey: BucketKey, exc: BaseException,
+                 phase: str) -> bool:
+        """Demote the bucket one tier after ``exc``; False when there is
+        no tier left.  Drops the bucket's compiled program so the next
+        run retraces at the demoted backend (an EXPECTED trace)."""
+        nxt = self._next_tier(bkey)
+        if nxt is None:
+            return False
+        _guard.tick(bkey[0], self._tier_name(bkey),
+                    f"{phase}_{_guard.classify(exc)}")
+        self.stats.degraded += 1
+        self._degraded[bkey] = nxt
+        self._fns.pop(bkey, None)
+        return True
+
+    def _execute_reference(self, bkey: BucketKey,
+                           reqs: List[BignumRequest]) -> np.ndarray:
+        """The host floor of the degradation ladder: python-int math per
+        real lane, no jit, cannot fail on device state.  Same (slots,
+        limbs) block contract as ``_execute`` (padded lanes zero)."""
+        op, nbits, _, _ = bkey
+        slots = self.cfg.slots
+        lw = nbits // 32 if op == "mod_exp" else -(-reqs[0].key.bits // 32)
+        out = np.zeros((slots, lw), np.uint32)
+        for i, r in enumerate(reqs):
+            v = api.from_limbs(np.asarray(r.value, np.uint32).reshape(-1))
+            res = _selfcheck.repair_lane(
+                op, v, modulus=r.modulus, exponent=r.exponent, key=r.key)
+            out[i] = api.to_limbs(res, 32 * lw)
+        return out
+
+    def _run_batch(self, bkey: BucketKey,
+                   reqs: List[BignumRequest]) -> np.ndarray:
+        """Execute one batch with bounded retry, then degrade-and-rerun:
+        transient failures get ``max_retries`` attempts (exponential
+        backoff); a persistent failure demotes the bucket's backend tier
+        and starts over.  Every request that enters here leaves with a
+        result unless even the host-reference floor raises."""
+        attempt = 0
+        while True:
+            try:
+                _inject.fire(f"serve/flush/{bkey[0]}")
+                if self._degraded.get(bkey) == "reference":
+                    out = self._execute_reference(bkey, reqs)
+                else:
+                    out = self._execute(bkey, reqs)
+                self._expect_trace = False
+                return out
+            except Exception as exc:                # noqa: BLE001
+                if attempt < self.cfg.max_retries:
+                    attempt += 1
+                    self.stats.retries += 1
+                    if self.cfg.retry_backoff_s:
+                        time.sleep(
+                            self.cfg.retry_backoff_s * 2 ** (attempt - 1))
+                    continue
+                if not self._degrade(bkey, exc, "flush"):
+                    raise
+                self._expect_trace = True
+                attempt = 0
+
     # -- serving ----------------------------------------------------------
 
     def warm(self, op: str, *, modulus: Optional[int] = None,
@@ -218,21 +342,63 @@ class BignumEngine:
         never traces again: snapshot ``stats.traces`` after warming to
         assert the zero-retrace property (the runtime form of the same
         contract is the retrace alarm, armed once any warm() finishes
-        -- see ``_on_trace``)."""
+        -- see ``_on_trace``).
+
+        Idempotent per bucket (re-warming a warmed key is a no-op, not a
+        fresh trace) and degraded-not-fatal: a bucket whose warm-up
+        raises is demoted a backend tier and re-warmed; warm only raises
+        when even the host-reference floor fails."""
+        if self._closed:
+            raise RuntimeError(
+                "BignumEngine is closed; warm() after close() is invalid "
+                "-- create a new engine")
         sample = BignumRequest(rid=-1, op=op, value=np.zeros(1, np.uint32),
                                modulus=modulus, exponent=exponent, key=key)
+        bkey = self.bucket_key(sample)
+        if bkey in self._warmed_keys:
+            return
         self._warmed = False            # warming traces are expected
         try:
-            self._execute(self.bucket_key(sample), [sample])
+            while True:
+                try:
+                    if self._degraded.get(bkey) == "reference":
+                        self._execute_reference(bkey, [sample])
+                    else:
+                        self._execute(bkey, [sample])
+                    break
+                except Exception as exc:            # noqa: BLE001
+                    if not self._degrade(bkey, exc, "warm"):
+                        raise
+            self._warmed_keys.add(bkey)
         finally:
             self._warmed = True
 
     def submit(self, req: BignumRequest, now: float = 0.0
                ) -> List[BignumRequest]:
-        """Enqueue; flushes and returns the batch when it fills."""
+        """Enqueue; flushes and returns the batch when it fills.
+
+        Admission control runs first: when the engine is overloaded
+        (queue depth >= ``max_queue``, or the oldest pending deadline
+        has slipped more than ``max_wait_s`` past due) the request is
+        SHED -- returned immediately with ``shed=True`` and no result,
+        ticking ``shed_total{op}`` -- so overload degrades to bounded,
+        observable rejections instead of unbounded queue growth."""
+        if self._closed:
+            raise RuntimeError(
+                "BignumEngine is closed; submit() after close() is "
+                "invalid -- create a new engine")
         bkey = self.bucket_key(req)
         req.arrival = now
         req.deadline = now + self.cfg.max_wait_s
+        nd = self.next_deadline()
+        if (self.pending() >= self.cfg.max_queue
+                or (nd is not None and now - nd > self.cfg.max_wait_s)):
+            req.shed = True
+            self.stats.shed += 1
+            _metrics.REGISTRY.counter(
+                "shed_total", "requests rejected at admission").inc(
+                op=req.op)
+            return [req]
         q = self._queues.setdefault(bkey, [])
         q.append(req)
         if len(q) == 1:
@@ -240,6 +406,29 @@ class BignumEngine:
         if len(q) >= self.cfg.slots:
             return self._flush(bkey, "full", now)
         return []
+
+    def close(self, drain: bool = True) -> List[BignumRequest]:
+        """Graceful shutdown: drain every pending bucket (serving the
+        queued requests), then mark the engine terminal.  With
+        ``drain=False`` pending requests are returned UNSERVED (shed)
+        instead of executed.  Idempotent; after close, submit()/warm()
+        raise RuntimeError."""
+        if self._closed:
+            return []
+        done: List[BignumRequest] = []
+        if drain:
+            while self.pending():
+                done += self.drain_one()
+        else:
+            for q in self._queues.values():
+                for r in q:
+                    r.shed = True
+                    self.stats.shed += 1
+                done += q
+            self._queues.clear()
+            self._deadlines.clear()
+        self._closed = True
+        return done
 
     def next_deadline(self) -> Optional[float]:
         return min(self._deadlines.values(), default=None)
@@ -265,16 +454,34 @@ class BignumEngine:
     def _flush(self, bkey: BucketKey, reason: str,
                now: Optional[float] = None) -> List[BignumRequest]:
         reqs = self._queues.pop(bkey)
-        self._deadlines.pop(bkey, None)
+        deadline = self._deadlines.pop(bkey, None)
         traces0 = self.stats.traces
         t0 = time.perf_counter()
-        out = self._execute(bkey, reqs)
+        try:
+            out = self._run_batch(bkey, reqs)
+        except Exception:
+            # retries and degradation are exhausted: put the batch back
+            # so close()/drain keep seeing it, then let the error surface
+            self._queues[bkey] = reqs
+            if deadline is not None:
+                self._deadlines[bkey] = deadline
+            raise
         dt = time.perf_counter() - t0
+        op = bkey[0]
+        # result-trimmed region: mod_exp pads to the bucket width but only
+        # the natural modulus width is returned (all requests in a bucket
+        # share bkey[3] = modulus / key.n), rsa_* returns full key width
+        trim = (-(-bkey[3].bit_length() // 32) if op == "mod_exp"
+                else out.shape[-1])
+        view = out[:, :trim]
+        sub = _inject.corrupt(f"serve/flush/{op}", view, len(reqs))
+        if sub is not view:                      # fault injected: flipped
+            out = np.array(out)                  # one bit of one real lane
+            out[:, :trim] = sub
+        if _selfcheck.enabled():
+            out = self._selfcheck_batch(bkey, reqs, out, trim)
         for i, r in enumerate(reqs):
-            if r.op == "mod_exp":
-                r.result = out[i, : -(-r.modulus.bit_length() // 32)]
-            else:
-                r.result = out[i]
+            r.result = out[i, :trim] if op == "mod_exp" else out[i]
         st = self.stats
         st.served += len(reqs)
         st.batches += 1
@@ -283,10 +490,50 @@ class BignumEngine:
             st.flush_full += 1
         else:
             st.flush_deadline += 1
+        for r in reqs:
+            if r.sla_s is None:
+                continue
+            wait = max(0.0, now - r.arrival) if now is not None else 0.0
+            if wait + dt > r.sla_s:
+                st.deadline_misses += 1
+                _metrics.REGISTRY.counter(
+                    "deadline_miss_total",
+                    "served requests whose latency exceeded sla_s").inc(
+                    op=op, bits=bkey[1])
         if obs.enabled():
             self._observe_flush(bkey, reqs, reason, now, t0, dt,
                                 traced=self.stats.traces > traces0)
         return list(reqs)
+
+    def _selfcheck_batch(self, bkey: BucketKey, reqs: List[BignumRequest],
+                         out: np.ndarray, trim: int) -> np.ndarray:
+        """Residue/witness-verify every REAL lane of a flushed batch and
+        repair mismatches from the host-int reference before results are
+        handed out.  Each bad lane ticks ``selfcheck_failures_total``
+        and ``fallback_total{reason="selfcheck"}``; the configured
+        policy (warn/raise) fires AFTER repair, so even "raise" callers
+        can recover served-but-flagged results from the request
+        objects."""
+        op, nbits, _, _ = bkey
+        bad = 0
+        for i, r in enumerate(reqs):
+            v = api.from_limbs(np.asarray(r.value, np.uint32).reshape(-1))
+            res = api.from_limbs(out[i, :trim])
+            if _selfcheck.verify_lane(op, v, res, modulus=r.modulus,
+                                      exponent=r.exponent, key=r.key):
+                continue
+            if bad == 0:
+                out = np.array(out)
+            bad += 1
+            good = _selfcheck.repair_lane(op, v, modulus=r.modulus,
+                                          exponent=r.exponent, key=r.key)
+            out[i, :trim] = api.to_limbs(good, 32 * trim)
+        if bad:
+            self.stats.selfcheck_failures += bad
+            _guard.tick(op, self._tier_name(bkey), "selfcheck", amount=bad)
+            _selfcheck.report(op, bad, "serve flush lane verification",
+                              bits=nbits)
+        return out
 
     def _observe_flush(self, bkey: BucketKey, reqs: List[BignumRequest],
                        reason: str, now: Optional[float], t0: float,

@@ -225,3 +225,38 @@ def test_set_default_backend_unknown_message():
     msg = str(e.value)
     for name in MOD.BACKENDS:
         assert name in msg
+
+
+# ---------------------------------------------------------------------------
+# to_limbs input validation (PR 9): uniform ValueError naming the argument
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("values,nbits,match", [
+    (5, 0, "nbits must be a positive int"),
+    (5, -32, "nbits must be a positive int"),
+    (5, "64", "nbits must be a positive int"),
+    (5, True, "nbits must be a positive int"),
+    (-1, 64, r"values must be >= 0, got -1"),
+    ([3, -7], 64, r"values\[1\] must be >= 0, got -7"),
+    (1 << 64, 64, r"values needs 65 bits but nbits=64"),
+    ([0, 1 << 40], 32, r"values\[1\] needs 41 bits but nbits=32"),
+    (3.5, 64, "values must be an int or a sequence of ints"),
+    (["7"], 64, r"values\[0\] must be an int, got str"),
+    ([None], 64, r"values\[0\] must be an int, got NoneType"),
+    (True, 64, "values must be an int"),
+    ([False], 64, r"values\[0\] must be an int, got a bool"),
+])
+def test_to_limbs_rejects_bad_inputs(values, nbits, match):
+    with pytest.raises(ValueError, match=match):
+        api.to_limbs(values, nbits)
+
+
+def test_to_limbs_accepts_numpy_ints_and_boundaries():
+    # numpy integers coerce via __index__; declared-width boundary holds
+    out = api.to_limbs([np.uint64(7), np.int32(5)], 64)
+    assert api.from_limbs(out) == [7, 5]
+    assert api.from_limbs(api.to_limbs((1 << 64) - 1, 64)) == (1 << 64) - 1
+    # nbits is the declared width, not the rounded-up limb width
+    with pytest.raises(ValueError, match="needs 34 bits but nbits=33"):
+        api.to_limbs(1 << 33, 33)
+    assert list(api.to_limbs(1 << 32, 33)) == [0, 1]

@@ -180,8 +180,12 @@ def test_configure_rejects_bad_capacity():
 
 def test_cache_stats_facade_shape():
     stats = api.cache_stats()
-    assert set(stats) == {"twiddle", "operand", "autotune"}
-    for section in stats.values():
+    assert set(stats) == {"twiddle", "operand", "autotune", "ctx"}
+    for name in ("twiddle", "operand", "autotune"):
+        assert {"hits", "misses"} <= set(stats[name])
+    # ctx nests one hits/misses block per memoized modular setup
+    assert set(stats["ctx"]) == {"mont_setup", "barrett_setup"}
+    for section in stats["ctx"].values():
         assert {"hits", "misses"} <= set(section)
     assert stats["operand"]["capacity"] == NO.operand_cache_capacity()
 

@@ -68,3 +68,43 @@ def test_serve_engine_greedy():
     # determinism
     out2 = ServeEngine(model, params, EngineConfig(slots=2, max_seq=64)).run(reqs)
     assert out == out2
+
+
+def test_serve_engine_eos_early_stop():
+    cfg = get_config("smollm_135m", reduced=True).replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(3))
+    rng = np.random.default_rng(5)
+    prompt = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    free = ServeEngine(model, params, EngineConfig(slots=2, max_seq=64))
+    ref = free.run([Request(rid=0, prompt=prompt, max_new_tokens=8)])[0]
+    assert len(ref) == 8
+    # re-run with eos set to a token the model actually emits mid-stream:
+    # generation must stop AT the eos token, not run to max_new_tokens
+    eos = ref[3]
+    stop = ServeEngine(model, params,
+                       EngineConfig(slots=2, max_seq=64, eos_id=eos))
+    got = stop.run([Request(rid=0, prompt=prompt, max_new_tokens=8)])[0]
+    k = ref.index(eos)
+    assert got == ref[: k + 1]            # truncated at first eos, inclusive
+    assert len(got) < 8
+
+
+def test_serve_engine_multi_wave_refill():
+    cfg = get_config("smollm_135m", reduced=True).replace(remat="none")
+    model = build_model(cfg)
+    params = model.init(jax.random.key(4))
+    rng = np.random.default_rng(6)
+    # equal prompt lengths => identical left-padding in every wave, so
+    # slot grouping must not change any request's output
+    reqs = [Request(rid=i, prompt=rng.integers(
+                0, cfg.vocab_size, (5,)).astype(np.int32),
+                max_new_tokens=3 + (i % 3)) for i in range(5)]
+    waves = ServeEngine(model, params,
+                        EngineConfig(slots=2, max_seq=64)).run(reqs)
+    single = ServeEngine(model, params,
+                         EngineConfig(slots=8, max_seq=64)).run(reqs)
+    assert set(waves) == {0, 1, 2, 3, 4}
+    for r in reqs:                        # per-request budget respected
+        assert len(waves[r.rid]) == r.max_new_tokens
+    assert waves == single                # refill waves == one big batch

@@ -206,3 +206,187 @@ def test_rsa_ops_through_engine():
     assert int(api.from_limbs(dec_req.result)) == msg
     # three ops -> three distinct programs, all padded singleton batches
     assert eng.stats.programs == 3 and eng.stats.padded_lanes == 3
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance: lifecycle, shedding, retry, degradation, selfcheck
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(autouse=True)
+def _resilience_clean():
+    from repro import config
+    from repro.resilience import inject
+    from repro.resilience.breaker import BREAKER
+    inject.clear()
+    BREAKER.reset()
+    yield
+    inject.clear()
+    BREAKER.reset()
+    config.set_overrides({"selfcheck": None})
+
+
+def test_warm_is_idempotent_per_bucket():
+    eng = BE.BignumEngine(SMALL, backend="jnp")
+    n = _odd(80)
+    eng.warm("mod_exp", modulus=n, exponent=0x10001)
+    traces = eng.stats.traces
+    eng.warm("mod_exp", modulus=n, exponent=0x10001)   # no-op: no retrace
+    assert eng.stats.traces == traces
+    assert eng.stats.programs == 1
+
+
+def test_close_lifecycle():
+    eng = _stub(BE.BignumEngine(SMALL))
+    n = _odd(80)
+    eng.submit(_mod_exp_req(0, n, e=5), now=0.0)
+    done = eng.close()                     # drains the pending request
+    assert [r.rid for r in done] == [0] and not done[0].shed
+    assert eng.close() == []               # idempotent
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.submit(_mod_exp_req(1, n, e=5), now=0.0)
+    with pytest.raises(RuntimeError, match="closed"):
+        eng.warm("mod_exp", modulus=n, exponent=5)
+
+
+def test_close_without_drain_sheds():
+    eng = _stub(BE.BignumEngine(SMALL))
+    n = _odd(80)
+    eng.submit(_mod_exp_req(0, n, e=5), now=0.0)
+    done = eng.close(drain=False)
+    assert len(done) == 1 and done[0].shed and done[0].result is None
+    assert eng.stats.shed == 1 and eng.pending() == 0
+
+
+def test_submit_sheds_on_queue_bound():
+    cfg = ServeConfig(bucket_bits=SMALL.bucket_bits,
+                      exp_bucket_bits=SMALL.exp_bucket_bits,
+                      slots=4, max_wait_s=10.0, max_queue=2)
+    eng = _stub(BE.BignumEngine(cfg))
+    n = _odd(80)
+    assert eng.submit(_mod_exp_req(0, n, e=5), now=0.0) == []
+    assert eng.submit(_mod_exp_req(1, n, e=5), now=0.0) == []
+    out = eng.submit(_mod_exp_req(2, n, e=5), now=0.0)
+    assert len(out) == 1 and out[0].shed and out[0].result is None
+    assert eng.stats.shed == 1 and eng.pending() == 2
+
+
+def test_submit_sheds_when_deadline_slips():
+    eng = _stub(BE.BignumEngine(SMALL))
+    n = _odd(80)
+    eng.submit(_mod_exp_req(0, n, e=5), now=0.0)
+    # arrival far past the oldest deadline + max_wait: overloaded
+    out = eng.submit(_mod_exp_req(1, n, e=5), now=10 * SMALL.max_wait_s)
+    assert len(out) == 1 and out[0].shed
+
+
+def _flaky_stub(engine, fail_times, exc=None):
+    """_execute fails the first ``fail_times`` calls, then succeeds."""
+    lw = max(engine.cfg.bucket_bits) // 32
+    calls = {"n": 0}
+
+    def execute(bkey, reqs):
+        calls["n"] += 1
+        if calls["n"] <= fail_times:
+            raise exc or RuntimeError("transient flush failure")
+        return np.zeros((engine.cfg.slots, lw), np.uint32)
+
+    engine._execute = execute
+    return calls
+
+
+def test_flush_retries_then_succeeds():
+    eng = BE.BignumEngine(SMALL)
+    calls = _flaky_stub(eng, fail_times=2)        # max_retries=2 absorbs
+    n = _odd(80)
+    eng.submit(_mod_exp_req(0, n, e=5), now=0.0)
+    done = eng.drain_one()
+    assert [r.rid for r in done] == [0]
+    assert calls["n"] == 3 and eng.stats.retries == 2
+    assert eng.stats.degraded == 0
+
+
+def test_flush_degrades_bucket_after_retries():
+    eng = BE.BignumEngine(SMALL, backend=None)
+    calls = _flaky_stub(eng, fail_times=3)        # retries exhausted once
+    n = _odd(80)
+    req = _mod_exp_req(0, n, e=5)
+    eng.submit(req, now=0.0)
+    done = eng.drain_one()
+    assert [r.rid for r in done] == [0]
+    bkey = eng.bucket_key(req)
+    assert eng._degraded[bkey] == "jnp"           # auto -> jnp
+    assert eng.stats.degraded == 1 and eng.stats.retries == 2
+    assert calls["n"] == 4                        # 3 failures + 1 at jnp
+
+
+def test_degradation_ladder_reaches_reference():
+    eng = BE.BignumEngine(SMALL, backend="jnp")
+    n = _odd(80)
+    req = _mod_exp_req(0, n, e=5)
+    bkey = eng.bucket_key(req)
+    assert eng._next_tier(bkey) == "reference"    # jnp degrades straight
+    eng._degraded[bkey] = "reference"
+    assert eng._next_tier(bkey) is None           # floor: nothing below
+    # the reference tier serves exactly (host python-int, no jit)
+    eng.submit(req, now=0.0)
+    done = eng.drain_one()
+    assert int(api.from_limbs(done[0].result)) == _oracle(req)
+    assert eng.stats.traces == 0                  # never touched jax
+
+
+def test_warm_partial_failure_degrades_not_fatal():
+    eng = BE.BignumEngine(SMALL, backend="jnp")
+    n = _odd(80)
+    calls = {"n": 0}
+    real = eng._execute
+
+    def flaky(bkey, reqs):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("warm-time compile blew up")
+        return real(bkey, reqs)
+
+    eng._execute = flaky
+    eng.warm("mod_exp", modulus=n, exponent=0x10001)   # degraded, not fatal
+    bkey = eng.bucket_key(BE.BignumRequest(
+        rid=-1, op="mod_exp", value=np.zeros(1, np.uint32), modulus=n,
+        exponent=0x10001))
+    assert eng._degraded[bkey] == "reference"     # jnp -> reference
+    assert eng.stats.degraded == 1
+    req = _mod_exp_req(0, n, e=0x10001)
+    eng.submit(req, now=0.0)
+    done = eng.drain_one()
+    assert int(api.from_limbs(done[0].result)) == _oracle(req)
+
+
+def test_deadline_miss_counter():
+    eng = _stub(BE.BignumEngine(SMALL))
+    n = _odd(80)
+    r0 = _mod_exp_req(0, n, e=5)
+    r0.sla_s = 1e-9                               # impossible SLA
+    r1 = _mod_exp_req(1, n, e=5)
+    r1.sla_s = 1e9                                # unmissable SLA
+    eng.submit(r0, now=0.0)
+    eng.submit(r1, now=0.0)
+    eng.drain_one()
+    assert eng.stats.deadline_misses == 1
+
+
+def test_corrupt_injection_caught_and_repaired():
+    from repro import config
+    from repro.resilience import inject
+    config.set_overrides({"selfcheck": "warn"})
+    inject.install("corrupt", "serve/flush", seed=3)
+    eng = BE.BignumEngine(SMALL, backend="jnp")
+    n = _odd(80)
+    reqs = [_mod_exp_req(i, n, e=0x10001) for i in range(SMALL.slots)]
+    done = []
+    with pytest.warns(Warning, match="selfcheck"):
+        for r in reqs:
+            done += eng.submit(r, now=0.0)
+    assert len(done) == SMALL.slots
+    n_corrupt = sum(1 for e in inject.log() if e["kind"] == "corrupt")
+    assert n_corrupt == 1
+    assert eng.stats.selfcheck_failures == 1
+    for r in reqs:                                # repaired: all exact
+        assert int(api.from_limbs(r.result)) == _oracle(r)
